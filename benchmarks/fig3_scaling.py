@@ -1,0 +1,82 @@
+"""Paper Figure 3 analogue: runtime scalability vs number of nodes.
+
+Sweeps n_nodes over the analytic runtime model (eqs. 15–19) and over the
+transport-simulated TL protocol, emitting per-method runtime curves.
+Validates the paper's claims: TL flattest, SL/SL+ blow up linearly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.paper_models import DATRET
+from repro.core.node import TLNode
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.runtime_model import (WorkloadSpec, runtime_fl, runtime_sfl,
+                                      runtime_sl, runtime_slp, runtime_tl)
+from repro.core.transport import NetworkModel, Transport
+from repro.data.datasets import shard_iid, tabular
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+NODES = (5, 10, 20, 40, 80)
+
+
+def analytic_curves():
+    base = WorkloadSpec(
+        n_nodes=20, samples_per_node=500, batch_size=50,
+        model_bytes=45e6, first_layer_bytes_per_sample=64 * 28 * 28 * 4,
+        logits_bytes_per_sample=40, first_layer_param_bytes=64 * 9 * 4,
+        flops_per_sample_fwd=1.8e9, flops_per_sample_bwd=3.6e9,
+        client_flops_per_s=5e12, server_flops_per_s=1e14)
+    curves = {m: [] for m in ("FL", "SL", "SL+", "SFL", "TL")}
+    for n in NODES:
+        spec = dataclasses.replace(base, n_nodes=n)
+        curves["FL"].append(runtime_fl(spec))
+        curves["SL"].append(runtime_sl(spec))
+        curves["SL+"].append(runtime_slp(spec))
+        curves["SFL"].append(runtime_sfl(spec))
+        curves["TL"].append(runtime_tl(spec, cache_model=True))
+    return curves
+
+
+def simulated_tl_curve(nodes=(2, 4, 8)):
+    out = []
+    for n in nodes:
+        ds = tabular(n * 40, 32, 4, seed=0)
+        shards = shard_iid(ds, n, seed=0)
+        model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
+        tr = Transport(network=NetworkModel(bandwidth_bytes_per_s=1e9 / 8,
+                                            rtt_s=0.02))
+        tl_nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
+        orch = TLOrchestrator(model, tl_nodes, sgd(0.05), tr, batch_size=40,
+                              seed=0, check_consistency=False,
+                              cache_model_per_epoch=True)
+        orch.initialize(jax.random.PRNGKey(0))
+        orch.train_epoch()
+        out.append((n, tr.clock_s, tr.total_bytes))
+    return out
+
+
+def main():
+    t0 = time.time()
+    curves = analytic_curves()
+    for m, vals in curves.items():
+        for n, v in zip(NODES, vals):
+            print(f"fig3/analytic/{m}/nodes{n},{(time.time()-t0)*1e6:.0f},{v:.2f}")
+    # claims: TL flattest; SL linear in nodes
+    tl_growth = curves["TL"][-1] / curves["TL"][0]
+    sl_growth = curves["SL"][-1] / curves["SL"][0]
+    assert tl_growth < 2.0 < sl_growth
+    sim = simulated_tl_curve()
+    for n, clock, nbytes in sim:
+        print(f"fig3/simulated_tl/nodes{n},{(time.time()-t0)*1e6:.0f},"
+              f"{clock:.4f}s/{nbytes}B")
+    return curves
+
+
+if __name__ == "__main__":
+    main()

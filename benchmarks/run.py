@@ -1,0 +1,39 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness:
+
+  table1_quality  — paper Table 1: quality of CL/TL/FL/SL/SL+/SFL across
+                    four dataset families
+  table2_runtime  — paper Table 2: per-round runtime + bytes (analytic
+                    eqs. 15-19 + transport-simulated)
+  fig3_scaling    — paper Fig. 3: runtime vs node count
+  roofline_report — the roofline table from the dry-run artifacts
+"""
+import sys
+import time
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from benchmarks import fig3_scaling, roofline_report, table1_quality, \
+        table2_runtime
+    failures = []
+    for name, mod in [("table2_runtime", table2_runtime),
+                      ("fig3_scaling", fig3_scaling),
+                      ("roofline_report", roofline_report),
+                      ("table1_quality", table1_quality)]:
+        t = time.time()
+        try:
+            mod.main()
+            print(f"{name}/total,{(time.time()-t)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"{name}/total,{(time.time()-t)*1e6:.0f},FAILED:{e}")
+    print(f"all/total,{(time.time()-t0)*1e6:.0f},"
+          f"{'ok' if not failures else failures}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: Traversal Learning in ~60 lines.
+
+Four nodes hold private shards; the orchestrator trains a classifier over
+them WITHOUT seeing raw data, and the result matches centralized training
+exactly (the paper's losslessness claim).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+import dataclasses
+
+from repro.configs.paper_models import DATRET
+from repro.core import TLNode, TLOrchestrator, Transport
+from repro.core.baselines import ShardData, evaluate, train_cl
+from repro.data.datasets import shard_noniid, tabular
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+
+def main():
+    # a 4-class tabular task, split non-IID across 4 nodes
+    ds = tabular(n=1200, d=32, n_classes=4, seed=0, margin=2.0, noise=0.8)
+    train, test = ds.split(0.8)
+    shards = shard_noniid(train, n_nodes=4, alpha=0.3, seed=1)
+    model = SmallModel(dataclasses.replace(DATRET, n_classes=ds.n_classes))
+
+    # --- Traversal Learning: FP on nodes, BP on the orchestrator ---------
+    transport = Transport()
+    nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
+    orch = TLOrchestrator(model, nodes, sgd(0.05), transport,
+                          batch_size=32, seed=0)
+    orch.initialize(jax.random.PRNGKey(0))
+    for epoch in range(4):
+        stats = orch.train_epoch()
+        print(f"epoch {epoch}: loss {np.mean([s.loss for s in stats]):.4f} "
+              f"acc {np.mean([s.acc for s in stats]):.3f} "
+              f"eq12-consistency {max(s.grad_consistency for s in stats):.2e}")
+
+    acc_tl = evaluate(model, orch.params, test.x, test.y)["acc"]
+
+    # --- centralized reference (privacy-violating upper bound) -----------
+    sdata = [ShardData(jax.numpy.asarray(s.x), jax.numpy.asarray(s.y))
+             for s in shards]
+    p_cl = train_cl(model, sdata, sgd(0.05), key=jax.random.PRNGKey(0),
+                    epochs=4, batch_size=32)
+    acc_cl = evaluate(model, p_cl, test.x, test.y)["acc"]
+
+    mb = transport.total_bytes / 1e6
+    print(f"\nTL test acc  {acc_tl:.3f}")
+    print(f"CL test acc  {acc_cl:.3f}   (TL is lossless: same data, same "
+          f"quality, raw data never moved)")
+    print(f"TL communication: {mb:.1f} MB "
+          f"({transport.n_messages} messages, simulated "
+          f"{transport.clock_s:.2f}s on a 1 Gb/s WAN)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Render §Perf summary: baseline vs v2 vs v3opt for the three pairs."""
+import json, glob, os, sys
+
+def get(arch, shape, tag, mesh="single"):
+    p = f"experiments/artifacts/{arch}__{shape}__{mesh}__{tag}.json"
+    if not os.path.exists(p): return None
+    a = json.load(open(p))
+    return a if a.get("status") == "ok" else None
+
+PAIRS = [("deepseek-v3-671b", "train_4k"),
+         ("deepseek-v3-671b", "prefill_32k"),
+         ("qwen2.5-32b", "decode_32k")]
+TAGS = ["baseline", "v2", "v3opt", "opt_microbatch", "opt_rematdots"]
+
+print("| pair | variant | t_compute | t_memory | t_collective | dominant | useful | mem/chip |")
+print("|---|---|---|---|---|---|---|---|")
+for arch, shape in PAIRS:
+    for tag in TAGS:
+        a = get(arch, shape, tag)
+        if a is None: continue
+        dom = max(a["t_compute"], a["t_memory"], a["t_collective"])
+        print(f"| {arch}×{shape} | {tag} | {a['t_compute']:.2e} | {a['t_memory']:.2e} "
+              f"| {a['t_collective']:.2e} | {a['bottleneck']} ({dom:.2e}s) "
+              f"| {a['useful_flops_ratio']:.2f} | {a['peak_memory_per_chip']/2**30:.0f}G |")

@@ -1,0 +1,3 @@
+"""repro — Traversal Learning (TL) as a production multi-pod JAX framework."""
+
+__version__ = "1.0.0"

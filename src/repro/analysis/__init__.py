@@ -1,0 +1,6 @@
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     collective_bytes, model_flops,
+                                     shape_bytes, summarize)
+
+__all__ = ["Roofline", "collective_bytes", "model_flops", "shape_bytes",
+           "summarize", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,133 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = collective_bytes_per_chip / ICI_BW
+
+Sources: ``compiled.cost_analysis()`` supplies flops and bytes accessed for
+the per-device SPMD program.  Collective bytes are NOT in cost_analysis —
+we parse the post-SPMD optimized HLO (``compiled.as_text()``) and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (documented convention: bytes that land on
+a chip's links ≈ result bytes; all-reduce counted twice for the
+reduce+broadcast halves).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)"
+                       r"\[([0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all tensors in an HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type result bytes summed over the (per-device) module."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2)
+        op = m.group(3)
+        nbytes = shape_bytes(shape_str)
+        if op == "all-reduce":
+            nbytes *= 2          # reduce + broadcast halves
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops_global: float = 0.0
+    peak_memory_per_chip: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs — catches remat/dispatch waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    def to_dict(self):
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N(_active)·tokens for training; 2·N for one forward
+    token-pass (prefill), 2·N per generated token for decode."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+
+def summarize(artifact: dict) -> str:
+    r = artifact
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:9s} "
+            f"C={r['t_compute']:.3e}s M={r['t_memory']:.3e}s "
+            f"N={r['t_collective']:.3e}s -> {r['bottleneck']:10s} "
+            f"useful={r['useful_flops_ratio']:.2f}")

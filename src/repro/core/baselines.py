@@ -1,0 +1,205 @@
+"""Baseline distributed-learning methods the paper compares TL against:
+
+  CL   — centralized learning (upper bound; TL must match it exactly),
+  FL   — FedAvg [McMahan et al.]: local epochs + weighted model averaging,
+  SL   — vanilla split learning: client holds the first layers, server the
+         rest; clients processed sequentially with client-weight handoff,
+  SL+  — split learning without label sharing: first AND last layers stay
+         on the client, the middle runs on the server,
+  SFL  — SplitFed: SL's split but clients run in parallel and their parts
+         are FedAvg'd each round.
+
+All operate on ``SmallModel``'s split API so quality comparisons
+(benchmarks/table1) are apples-to-apples, and all count communication bytes
+through the same ``Transport``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.node import ce_sum
+from repro.core.transport import Transport
+
+
+def _batches(n, bs, rng):
+    idx = rng.permutation(n)
+    return [idx[i:i + bs] for i in range(0, n - bs + 1, bs)]
+
+
+def _tree_weighted_mean(trees, weights):
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    return jax.tree.map(
+        lambda *leaves: sum(wi * l for wi, l in zip(w, leaves)), *trees)
+
+
+@dataclass
+class ShardData:
+    x: jnp.ndarray
+    y: jnp.ndarray
+
+
+# ---------------------------------------------------------------------- CL
+
+def train_cl(model, shards: Sequence[ShardData], optimizer, *, key,
+             epochs: int, batch_size: int, seed: int = 0):
+    """Centralized: pool all shards (the privacy-violating upper bound)."""
+    x = jnp.concatenate([s.x for s in shards])
+    y = jnp.concatenate([s.y for s in shards])
+    params = model.init(key)
+    state = optimizer.init(params)
+    rng = np.random.default_rng(seed)
+    grad_fn = jax.jit(jax.grad(
+        lambda p, xb, yb: ce_sum(model.forward(p, xb), yb) / xb.shape[0]))
+    for _ in range(epochs):
+        for idx in _batches(len(x), batch_size, rng):
+            g = grad_fn(params, x[idx], y[idx])
+            params, state = optimizer.update(params, g, state)
+    return params
+
+
+# ------------------------------------------------------------------ FedAvg
+
+def train_fl(model, shards: Sequence[ShardData], optimizer, *, key,
+             rounds: int, local_epochs: int, batch_size: int,
+             transport: Optional[Transport] = None, seed: int = 0):
+    """FedAvg: each round every client trains locally then the server
+    averages parameters weighted by shard size (the paper's accuracy-losing
+    aggregation)."""
+    tr = transport or Transport()
+    params = model.init(key)
+    rng = np.random.default_rng(seed)
+    grad_fn = jax.jit(jax.grad(
+        lambda p, xb, yb: ce_sum(model.forward(p, xb), yb) / xb.shape[0]))
+    for _ in range(rounds):
+        locals_, sizes = [], []
+        with tr.parallel():
+            for s in shards:
+                p_i = tr.send("model", params)                 # server -> client
+                st_i = optimizer.init(p_i)
+                for _e in range(local_epochs):
+                    for idx in _batches(len(s.x), batch_size, rng):
+                        g = grad_fn(p_i, s.x[idx], s.y[idx])
+                        p_i, st_i = optimizer.update(p_i, g, st_i)
+                locals_.append(tr.send("model_update", p_i))   # client -> server
+                sizes.append(len(s.x))
+        params = _tree_weighted_mean(locals_, sizes)           # aggregation
+    return params
+
+
+# ------------------------------------------------------- split-learning ops
+
+def _split_grads(model, params, xb, yb):
+    """Returns (grads wrt first-layer params, grads wrt tail params, loss),
+    plus the smashed-data tensors that cross the wire in SL."""
+    def loss_fn(p):
+        return ce_sum(model.forward(p, xb), yb) / xb.shape[0]
+    return jax.grad(loss_fn)(params)
+
+
+def train_sl(model, shards: Sequence[ShardData], optimizer, *, key,
+             rounds: int, batch_size: int,
+             transport: Optional[Transport] = None, seed: int = 0,
+             no_label_sharing: bool = False):
+    """Vanilla SL (and SL+ with ``no_label_sharing``).
+
+    Clients are visited sequentially; each trains on its local batches with
+    the shared model (client part handed off from the previous client, the
+    server part updated in place).  The *sequential* single-shard updates
+    cause the catastrophic-forgetting quality drop the paper reports.
+
+    Wire traffic per batch: smashed activations client->server, cut-layer
+    gradients server->client (both directions sized like X^(1)); SL+ adds
+    the last-layer activations/gradients round trip.
+    """
+    tr = transport or Transport()
+    params = model.init(key)
+    state = optimizer.init(params)
+    rng = np.random.default_rng(seed)
+
+    grad_fn = jax.jit(jax.grad(
+        lambda p, xb, yb: ce_sum(model.forward(p, xb), yb) / xb.shape[0],
+        ), static_argnums=())
+
+    for _ in range(rounds):
+        for s in shards:                       # sequential node visits
+            for idx in _batches(len(s.x), batch_size, rng):
+                xb, yb = s.x[idx], s.y[idx]
+                smashed = model.first_layer(params, xb)
+                tr.send("smashed", smashed)                    # client -> server
+                if not no_label_sharing:
+                    tr.send("labels", yb)
+                g = grad_fn(params, xb, yb)
+                tr.send("cut_grads", smashed)                  # server -> client (same size)
+                if no_label_sharing:
+                    # SL+ extra hop: last layer activations + grads stay client-side
+                    logits = model.forward(params, xb)
+                    tr.send("last_act", logits)
+                    tr.send("last_grad", logits)
+                params, state = optimizer.update(params, g, state)
+    return params
+
+
+def train_sfl(model, shards: Sequence[ShardData], optimizer, *, key,
+              rounds: int, batch_size: int,
+              transport: Optional[Transport] = None, seed: int = 0):
+    """SplitFed: per round, clients run SL-style steps in parallel from the
+    same starting weights; client parts (and server parts, splitfed-v1) are
+    then FedAvg'd — combining SL's split with FL's aggregation loss."""
+    tr = transport or Transport()
+    params = model.init(key)
+    rng = np.random.default_rng(seed)
+    grad_fn = jax.jit(jax.grad(
+        lambda p, xb, yb: ce_sum(model.forward(p, xb), yb) / xb.shape[0]))
+    for _ in range(rounds):
+        locals_, sizes = [], []
+        with tr.parallel():
+            for s in shards:
+                p_i = tr.send("model_client_part", params)
+                st_i = optimizer.init(p_i)
+                for idx in _batches(len(s.x), batch_size, rng):
+                    xb, yb = s.x[idx], s.y[idx]
+                    tr.send("smashed", model.first_layer(p_i, xb))
+                    g = grad_fn(p_i, xb, yb)
+                    tr.send("cut_grads", model.first_layer(p_i, xb))
+                    p_i, st_i = optimizer.update(p_i, g, st_i)
+                locals_.append(tr.send("model_update", p_i))
+                sizes.append(len(s.x))
+        params = _tree_weighted_mean(locals_, sizes)
+    return params
+
+
+def evaluate(model, params, x, y) -> dict:
+    logits = model.forward(params, jnp.asarray(x))
+    pred = np.asarray(jnp.argmax(logits, -1))
+    y = np.asarray(y)
+    acc = float((pred == y).mean())
+    out = {"acc": acc}
+    # macro F1
+    classes = np.unique(y)
+    f1s = []
+    for c in classes:
+        tp = ((pred == c) & (y == c)).sum()
+        fp = ((pred == c) & (y != c)).sum()
+        fn = ((pred != c) & (y == c)).sum()
+        prec = tp / max(tp + fp, 1)
+        rec = tp / max(tp + fn, 1)
+        f1s.append(0.0 if prec + rec == 0 else 2 * prec * rec / (prec + rec))
+    out["macro_f1"] = float(np.mean(f1s))
+    # AUC (binary only, rank-based)
+    if len(classes) == 2:
+        score = np.asarray(jax.nn.softmax(logits, -1))[:, 1]
+        order = np.argsort(score)
+        ranks = np.empty_like(order, dtype=np.float64)
+        ranks[order] = np.arange(1, len(score) + 1)
+        pos = y == 1
+        n_pos, n_neg = pos.sum(), (~pos).sum()
+        if n_pos and n_neg:
+            out["auc"] = float(
+                (ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))
+    return out

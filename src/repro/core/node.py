@@ -1,0 +1,92 @@
+"""TL node: owns a private data shard, performs distributed-phase FP.
+
+Per paper §3.3.1 a node, given the current model:
+  1. computes first-layer activations X^(1) for its slice of the virtual
+     batch (eq. 1–2),
+  2. runs the full forward locally and local BP to obtain the last-layer
+     gradient δ^(L) (eq. 3) and the first-layer gradient ∂L/∂X^(1),
+  3. transmits only {X^(1), ∂L/∂X^(1), δ^(L)} to the orchestrator — never
+     raw data or labels.
+
+Completion of an under-specified point (recorded in DESIGN.md): the paper's
+eqs. 7–11 update layers L..2 from recomputed activations but give no
+∂L/∂W^(1) — which cannot be formed without the raw inputs x.  The only
+privacy-preserving completion is for the node to also send its *first-layer
+weight gradients* (a single layer's worth of parameters), computed during
+the same local BP.  With that, TL's global update is exactly the CL update.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ce_sum(logits, y):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1).sum()
+
+
+@dataclass
+class FPResult:
+    """What a node ships to the orchestrator after its FP visit."""
+    x1: Any                 # first-layer activations, (k, ...)
+    delta_L: Any            # last-layer gradients dL/dlogits, (k, C)
+    dx1: Any                # first-layer gradients dL/dX^(1), (k, ...)
+    gw1: Any                # first-layer weight grads (param pytree, zeros elsewhere)
+    loss_sum: float
+    n_correct: int
+
+
+class TLNode:
+    """Holds a private shard (x, y); executes FP visits."""
+
+    def __init__(self, node_id: int, model, x, y):
+        self.node_id = node_id
+        self.model = model
+        self.x = jnp.asarray(x)
+        self.y = jnp.asarray(y)
+        self.params = None          # set by orchestrator's model distribution
+
+    # ---- protocol surface --------------------------------------------------
+    def index_range(self):
+        from repro.core.virtual_batch import IndexRange
+        return IndexRange(self.node_id, int(self.x.shape[0]))
+
+    def receive_model(self, params):
+        self.params = params
+
+    def forward_visit(self, local_indices: np.ndarray, batch_total: int) -> FPResult:
+        """One node visit of the traversal plan.  ``batch_total`` is the full
+        virtual-batch size N so the node scales its loss to (1/N)·Σ local CE,
+        making orchestrator-side aggregation a plain sum (exact CL grads for
+        unequal node shares — paper eq. 6 assumes equal shares)."""
+        assert self.params is not None, "model not distributed to node"
+        xb = self.x[local_indices]
+        yb = self.y[local_indices]
+        m, params = self.model, self.params
+
+        x1 = m.first_layer(params, xb)                                 # eq. 1–2
+
+        # local BP: δ^(L), dL/dX^(1), and first-layer weight grads
+        logits, pull_tail = jax.vjp(lambda h: m.tail_layers(params, h), x1)
+        loss = ce_sum(logits, yb) / batch_total
+        delta_L = jax.grad(lambda lg: ce_sum(lg, yb) / batch_total)(logits)  # eq. 3
+        (dx1,) = pull_tail(delta_L)
+        _, pull_first = jax.vjp(lambda p: m.first_layer(p, xb), params)
+        (gw1,) = pull_first(dx1)
+
+        acc = int((jnp.argmax(logits, -1) == yb).sum())
+        return FPResult(x1=x1, delta_L=delta_L, dx1=dx1, gw1=gw1,
+                        loss_sum=float(loss), n_correct=acc)
+
+    # ---- local evaluation (inference stays on-node) -------------------------
+    def evaluate(self, params):
+        logits = self.model.forward(params, self.x)
+        loss = float(ce_sum(logits, self.y) / self.x.shape[0])
+        acc = float((jnp.argmax(logits, -1) == self.y).mean())
+        return {"loss": loss, "acc": acc, "n": int(self.x.shape[0]),
+                "logits": np.asarray(logits), "y": np.asarray(self.y)}

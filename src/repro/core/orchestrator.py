@@ -1,0 +1,157 @@
+"""TL orchestrator — Algorithm 2: traversal scheduling, activation/gradient
+retrieval, centralized BP, model redistribution.
+
+Centralized phase (paper §3.3.2): the orchestrator reassembles the virtual
+batch's first-layer activations X^(1) in batch order, *recomputes* all
+deeper activations with the current parameters (eq. 4–5), backpropagates
+from the aggregated last-layer gradients (eq. 6–11), adds the node-supplied
+first-layer weight gradients, applies the update (eq. 13–14), and
+redistributes the model.
+
+The orchestrator also verifies eq. 12: its own recomputed ∂L/∂X^(1) must
+match the aggregate of the node-submitted first-layer gradients — the
+paper's "ensuring consistency with the recalculated forward pass".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.node import TLNode
+from repro.core.transport import Transport
+from repro.core.virtual_batch import VirtualBatchPlan, create_virtual_batches
+
+
+@dataclass
+class StepStats:
+    loss: float
+    acc: float
+    grad_consistency: float     # max |orchestrator dX1 - aggregated node dX1|
+
+
+class TLOrchestrator:
+    def __init__(self, model, nodes: Sequence[TLNode], optimizer,
+                 transport: Optional[Transport] = None, *,
+                 batch_size: int = 64, seed: int = 0,
+                 compute_time_fn: Callable[[int], float] = lambda n: 0.0,
+                 check_consistency: bool = True,
+                 cache_model_per_epoch: bool = False):
+        self.model = model
+        self.nodes = list(nodes)
+        self.opt = optimizer
+        self.transport = transport or Transport()
+        self.batch_size = batch_size
+        self.seed = seed
+        self.compute_time_fn = compute_time_fn
+        self.check_consistency = check_consistency
+        # §5.2 caching: redistribute the model once per epoch instead of once
+        # per virtual batch (bandwidth optimization; changes staleness!)
+        self.cache_model_per_epoch = cache_model_per_epoch
+        self.params = None
+        self.opt_state = None
+        self._epoch = 0
+
+    # ------------------------------------------------------------- lifecycle
+    def initialize(self, key):
+        self.params = self.model.init(key)
+        self.opt_state = self.opt.init(self.params)
+
+    def build_plan(self, epoch: int) -> VirtualBatchPlan:
+        ranges = [self.transport.send("index_range", n.index_range())
+                  for n in self.nodes]
+        return create_virtual_batches(ranges, self.batch_size,
+                                      seed=self.seed + epoch)
+
+    # ---------------------------------------------------------- one TL step
+    def train_batch(self, vb, node_by_id) -> StepStats:
+        N = vb.size
+        results, order = {}, []
+
+        if not self.cache_model_per_epoch:
+            with self.transport.parallel():
+                for seg in vb.traversal:
+                    node = node_by_id[seg.node_id]
+                    node.receive_model(
+                        self.transport.send("model", self.params))
+
+        # --- distributed FP along the traversal plan (pipelined: transfers
+        # of one node overlap the next node's compute — paper §3.2)
+        with self.transport.parallel():
+            for seg in vb.traversal:
+                node = node_by_id[seg.node_id]
+                self.transport.tick(self.compute_time_fn(len(seg.local_indices)))
+                fp = node.forward_visit(seg.local_indices, N)
+                wire = self.transport.send(
+                    "activations_grads",
+                    {"x1": fp.x1, "delta_L": fp.delta_L, "dx1": fp.dx1,
+                     "gw1": fp.gw1},
+                    compressible=True)
+                wire["loss_sum"], wire["n_correct"] = fp.loss_sum, fp.n_correct
+                results[seg.node_id] = (seg, wire)
+                order.append(seg.node_id)
+
+        # --- reassemble the virtual batch in global shuffled order
+        first_seg, first_fp = results[order[0]]
+        x1 = jnp.zeros((N,) + first_fp["x1"].shape[1:], first_fp["x1"].dtype)
+        dL = jnp.zeros((N,) + first_fp["delta_L"].shape[1:],
+                       first_fp["delta_L"].dtype)
+        dx1_nodes = jnp.zeros_like(x1)
+        gw1_total = jax.tree.map(jnp.zeros_like, self.params)
+        loss_sum, n_correct = 0.0, 0
+        for nid in order:
+            seg, fp = results[nid]
+            pos = seg.batch_positions
+            x1 = x1.at[pos].set(fp["x1"])
+            dL = dL.at[pos].set(fp["delta_L"])
+            dx1_nodes = dx1_nodes.at[pos].set(fp["dx1"])
+            gw1_total = jax.tree.map(jnp.add, gw1_total, fp["gw1"])
+            loss_sum += fp["loss_sum"] if isinstance(fp["loss_sum"], float) \
+                else float(fp["loss_sum"])
+            n_correct += fp["n_correct"] if isinstance(fp["n_correct"], int) \
+                else int(fp["n_correct"])
+
+        # --- centralized BP: recompute activations from X^(1) (eq. 4–5),
+        # backprop from aggregated δ^(L) (eq. 6–11)
+        _, pull = jax.vjp(
+            lambda p, h: self.model.tail_layers(p, h), self.params, x1)
+        g_tail, dx1_orch = pull(dL)
+        grads = jax.tree.map(jnp.add, g_tail, gw1_total)
+
+        consistency = float(jnp.max(jnp.abs(dx1_orch - dx1_nodes))) \
+            if self.check_consistency else float("nan")           # eq. 12
+
+        # --- parameter update (eq. 13–14) + redistribution
+        self.params, self.opt_state = self.opt.update(
+            self.params, grads, self.opt_state)
+        return StepStats(loss=loss_sum, acc=n_correct / N,
+                         grad_consistency=consistency)
+
+    # -------------------------------------------------------------- epochs
+    def train_epoch(self) -> List[StepStats]:
+        plan = self.build_plan(self._epoch)
+        node_by_id = {n.node_id: n for n in self.nodes}
+        if self.cache_model_per_epoch:
+            with self.transport.parallel():
+                for n in self.nodes:
+                    n.receive_model(self.transport.send("model", self.params))
+        stats = [self.train_batch(vb, node_by_id) for vb in plan.batches]
+        self._epoch += 1
+        return stats
+
+    def fit(self, key, epochs: int) -> List[StepStats]:
+        if self.params is None:
+            self.initialize(key)
+        out: List[StepStats] = []
+        for _ in range(epochs):
+            out.extend(self.train_epoch())
+        return out
+
+    # ----------------------------------------------------------- evaluation
+    def evaluate(self, x, y):
+        logits = self.model.forward(self.params, jnp.asarray(x))
+        pred = jnp.argmax(logits, -1)
+        return float((pred == jnp.asarray(y)).mean())

@@ -1,0 +1,110 @@
+"""Analytic runtime model — paper eqs. (15)–(19).
+
+    T_FL  = max(T_comp,client) + T_comm + T_agg                    (15)
+    T_SL  = Σ_clients (T_comp,client + 2 T_comm) + T_comp,server   (16)
+    T_SL+ = Σ_clients (T_comp,client^{more layers} + 2 T_comm) + T_comp,server
+    T_SFL = max(T_comp,client + T_comm) + T_agg                    (18)
+    T_TL  = max(T_comp,client) + T_comm + T_comp,server            (19)
+
+Communication volumes per method (per round over n nodes):
+    FL  : 2 · |θ| · n                       (model down + update up)
+    SL  : 2 · |X^(1)| per batch (sequential)
+    SFL : 2 · |θ_client| · n + 2 · |X^(1)|
+    TL  : |X^(1)| + |∂X^(1)| + |δ^(L)| + |∂W^(1)|  (+ model distribution)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    n_nodes: int
+    samples_per_node: int
+    batch_size: int
+    model_bytes: int
+    first_layer_bytes_per_sample: int     # X^(1) row size
+    logits_bytes_per_sample: int          # δ^(L) row size
+    first_layer_param_bytes: int
+    flops_per_sample_fwd: float
+    flops_per_sample_bwd: float
+    client_flops_per_s: float = 1e12
+    server_flops_per_s: float = 1e13
+    bandwidth_bytes_per_s: float = 1e9 / 8
+    rtt_s: float = 0.02
+    agg_s: float = 0.05
+
+
+def _t_comm(spec: WorkloadSpec, nbytes: float) -> float:
+    return spec.rtt_s + nbytes / spec.bandwidth_bytes_per_s
+
+
+def _per_round(spec: WorkloadSpec):
+    n_batches = spec.n_nodes * spec.samples_per_node // spec.batch_size
+    samples_client = spec.samples_per_node
+    t_fwd = spec.flops_per_sample_fwd / spec.client_flops_per_s
+    t_bwd = spec.flops_per_sample_bwd / spec.client_flops_per_s
+    return n_batches, samples_client, t_fwd, t_bwd
+
+
+def runtime_fl(spec: WorkloadSpec, local_epochs: int = 1) -> float:
+    _, samples, t_fwd, t_bwd = _per_round(spec)
+    t_client = local_epochs * samples * (t_fwd + t_bwd)
+    t_comm = _t_comm(spec, 2 * spec.model_bytes)
+    return t_client + t_comm + spec.agg_s                               # (15)
+
+
+def runtime_sl(spec: WorkloadSpec, extra_client_layers: float = 0.0) -> float:
+    _, samples, t_fwd, t_bwd = _per_round(spec)
+    act_bytes = spec.batch_size * spec.first_layer_bytes_per_sample
+    n_local_batches = samples // spec.batch_size
+    t_client = samples * (t_fwd + t_bwd) * (0.3 + extra_client_layers)
+    t_server = samples * (t_fwd + t_bwd) * 0.7 \
+        * spec.client_flops_per_s / spec.server_flops_per_s
+    per_client = t_client + n_local_batches * 2 * _t_comm(spec, act_bytes) + t_server
+    return spec.n_nodes * per_client                                    # (16) sequential
+
+
+def runtime_slp(spec: WorkloadSpec) -> float:
+    return runtime_sl(spec, extra_client_layers=0.15)                   # (17)
+
+
+def runtime_sfl(spec: WorkloadSpec) -> float:
+    _, samples, t_fwd, t_bwd = _per_round(spec)
+    act_bytes = spec.batch_size * spec.first_layer_bytes_per_sample
+    n_local_batches = samples // spec.batch_size
+    client_model = 0.3 * spec.model_bytes
+    t_client = samples * (t_fwd + t_bwd) * 0.3 \
+        + n_local_batches * 2 * _t_comm(spec, act_bytes) \
+        + _t_comm(spec, 2 * client_model)
+    return t_client + spec.agg_s                                        # (18) max over equal clients
+
+
+def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
+               cache_model: bool = False, pipelined: bool = True) -> float:
+    _, samples, t_fwd, t_bwd = _per_round(spec)
+    n_local_batches = samples // spec.batch_size
+    # client computes FP + local BP for the three gradients
+    t_client = samples * (t_fwd + t_bwd)
+    per_sample_wire = (2 * spec.first_layer_bytes_per_sample
+                       + spec.logits_bytes_per_sample)
+    wire = samples * per_sample_wire + n_local_batches * spec.first_layer_param_bytes
+    if compressed:
+        wire = wire / 4 + samples * 4                      # int8 + scales (§5.2)
+    if not cache_model:
+        wire += n_local_batches * spec.model_bytes         # per-batch redistribution
+    t_comm = _t_comm(spec, wire)
+    # orchestrator recompute + BP on the full virtual batch
+    t_server = (samples * spec.n_nodes * (t_fwd + t_bwd)
+                * spec.client_flops_per_s / spec.server_flops_per_s)
+    if pipelined:
+        # §3.2: while one batch is in centralized BP the next nodes run FP —
+        # server work overlaps client compute/transfers (eq. 19's single
+        # additive T_comp,server is the per-batch residual)
+        n_batches = max(n_local_batches * spec.n_nodes, 1)
+        return max(t_client + t_comm, t_server) + t_server / n_batches
+    return t_client + t_comm + t_server                                 # (19)
+
+
+ALL = {"FL": runtime_fl, "SL": runtime_sl, "SL+": runtime_slp,
+       "SFL": runtime_sfl, "TL": runtime_tl}

@@ -1,0 +1,230 @@
+"""Production TL training/serving steps for the multi-pod mesh.
+
+The TPU-native realization of Traversal Learning (DESIGN.md §2):
+
+* the virtual batch shards over the composite (pod, data) mesh axis — one
+  shard per logical *node*;
+* the node phase computes ``embed → block0`` locally (X^(1) and δ^(L) are
+  per-shard values);
+* the orchestrator phase is ``jax.checkpoint(tail, policy=nothing_saveable)``
+  — the backward pass *recomputes* every activation beyond block 0 from
+  X^(1) and the current parameters, exactly the paper's eq. 4–5 recompute,
+  then backpropagates (eq. 6–11);
+* gradient aggregation across nodes (eq. 6/12) is the psum GSPMD inserts
+  for the data-parallel reduce — a single cross-pod collective per step.
+
+``remat_mode`` selects the activation policy:
+  "tl"       — paper-faithful: save only X^(1) (+ the node-local embed/block0
+               residuals), recompute the whole tail during BP;
+  "none"     — beyond-paper baseline: save everything (memory-bound);
+  "per_layer"— beyond-paper middle ground: scan-level remat, save each
+               cycle's inputs (the usual production policy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.dist.sharding import (batch_axes, param_specs, tokens_pspec,
+                                 cache_pspec)
+from repro.models import transformer
+from repro.models.model import MTP_WEIGHT, Model, cross_entropy
+
+
+# ------------------------------------------------------------------ TL loss
+
+def tl_loss_fn(model: Model, cfg: ModelConfig, remat_mode: str = "tl"):
+    """Loss whose autodiff graph *is* the TL protocol."""
+    F = cfg.frontend_tokens if (cfg.frontend and not cfg.is_encdec) else 0
+
+    if cfg.is_encdec:
+        # TL boundary for enc-dec: decoder block 0.  The encoder runs in the
+        # node phase (it consumes node-local frontend embeddings).
+        def loss(params, batch):
+            return model.loss(params, batch)[0]
+        return loss
+
+    def tail_fn(params, h1, tokens):
+        logits, h, aux = transformer.tail(params, cfg, h1, return_hidden=True)
+        return logits, h, aux
+
+    if remat_mode == "tl":
+        tail_exec = jax.checkpoint(
+            tail_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat_mode == "none":
+        tail_exec = tail_fn
+    elif remat_mode == "dots":
+        # beyond-paper middle ground: keep matmul outputs, recompute the rest
+        tail_exec = jax.checkpoint(
+            tail_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        raise ValueError(remat_mode)
+
+    def loss(params, batch):
+        tokens, targets = batch["tokens"], batch["targets"]
+        extra = batch.get("embeds")
+        # ---- node phase: first-layer activations X^(1)
+        h0 = transformer.embed_tokens(params, cfg, tokens, extra)
+        h1, aux0 = transformer.block0(params, cfg, h0)
+        # ---- orchestrator phase: recompute-from-X^(1) BP
+        logits, h_final, aux = tail_exec(params, h1, tokens)
+        logits_txt = logits[:, F:] if F else logits
+        ce = cross_entropy(logits_txt, targets, batch.get("mask"))
+        total = ce + aux + aux0
+        if cfg.mtp_depth:
+            h_txt = h_final[:, F:] if F else h_final
+            mtp = transformer.mtp_logits(params, cfg, tokens, h_txt)
+            t2 = jnp.roll(targets, -1, axis=1)
+            valid = jnp.ones_like(t2).at[:, -2:].set(0)
+            total = total + MTP_WEIGHT * cross_entropy(mtp, t2, valid)
+        return total
+
+    return loss
+
+
+# ------------------------------------------------------------- train step
+
+def make_train_step(model: Model, cfg: ModelConfig, optimizer, *,
+                    remat_mode: str = "tl", microbatch: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    jit/lower with in_shardings from :func:`train_shardings`; GSPMD then
+    realizes the TL node axis + orchestrator reduction.
+
+    ``microbatch > 1`` splits the virtual batch into that many sequential
+    micro-batches with gradient accumulation (beyond-paper: the update stays
+    bit-identical to the full-batch TL update — mean of micro-grads — while
+    activation peak memory drops ~microbatch×).
+    """
+    loss_fn = tl_loss_fn(model, cfg, remat_mode)
+
+    if microbatch <= 1:
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state = optimizer.update(params, grads, opt_state)
+            return params, opt_state, loss
+        return step
+
+    def step(params, opt_state, batch):
+        def reshape(x):
+            return x.reshape((microbatch, x.shape[0] // microbatch)
+                             + x.shape[1:])
+        micro = {k: reshape(v) for k, v in batch.items()}
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+        grads = jax.tree.map(lambda g, p: (g / microbatch).astype(p.dtype),
+                             grads, params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss_sum / microbatch
+
+    return step
+
+
+def train_shardings(params, opt_state, cfg: ModelConfig, mesh: Mesh,
+                    shape: InputShape, *, with_embeds: bool = False):
+    """(in_shardings, out_shardings) pytrees for make_train_step's step."""
+    pspecs = param_specs(params, cfg, mesh)
+
+    # optimizer slots mirror their parameter's sharding rule (paths align
+    # because slot trees are tree_map'd off params); scalars replicate
+    from repro.dist.sharding import _mesh_sizes, param_pspec
+    sizes = _mesh_sizes(mesh)
+
+    def slot_spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return param_pspec(path, leaf, cfg, axis_sizes=sizes)
+    opt_specs = jax.tree_util.tree_map_with_path(slot_spec, opt_state)
+
+    tok_spec = tokens_pspec(mesh, shape.global_batch)
+    batch_specs = {"tokens": tok_spec, "targets": tok_spec}
+    if with_embeds:
+        batch_specs["embeds"] = P(tok_spec[0], None, None)
+    named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    in_sh = (named(pspecs), named(opt_specs), named(batch_specs))
+    out_sh = (named(pspecs), named(opt_specs), NamedSharding(mesh, P()))
+    return in_sh, out_sh
+
+
+# ------------------------------------------------------------- serve step
+
+def make_serve_step(model: Model, cfg: ModelConfig) -> Callable:
+    """(params, cache, token, cache_len) -> (logits, cache)."""
+    def step(params, cache, token, cache_len):
+        return model.decode_step(params, cache, token, cache_len)
+    return step
+
+
+def serve_shardings(params, cache, cfg: ModelConfig, mesh: Mesh,
+                    shape: InputShape, *, cache_seq_shard: bool = False,
+                    fsdp: Optional[bool] = None):
+    """``cache_seq_shard=True`` additionally shards the KV-cache *sequence*
+    dim over the ``model`` axis (flash-decoding layout, beyond-paper): each
+    model shard owns a contiguous chunk of the context and decode attention
+    reduces partial softmax statistics instead of all-gathering the cache.
+    ``fsdp=False`` serves with TP-only weight sharding (no per-step weight
+    all-gathers)."""
+    pspecs = param_specs(params, cfg, mesh, fsdp=fsdp)
+    B = shape.global_batch
+
+    def cache_spec(path, leaf):
+        name = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                        for e in path)
+        last = name.split("/")[-1]
+        nd = leaf.ndim
+        # leading stacked-layer axis inside "cycles"/"self" stacks
+        lead = 1 if ("cycles" in name or "self" in name) else 0
+        core = nd - lead
+        if last == "pos":
+            return P(*((None,) * nd))
+        kind = "state" if last in ("state", "h", "conv", "enc_out") else "kv"
+        base = tuple(cache_pspec(mesh, B, kind))
+        if cache_seq_shard and kind == "kv":
+            # (B, S, ...): batch on dp when divisible; sequence on model
+            # (plus dp when the batch dim can't shard, e.g. batch=1)
+            if base and base[0] is not None:
+                base = (base[0], "model")
+            else:
+                base = (None, ("model",) + tuple(batch_axes(mesh)))
+        spec = list(((None,) * lead + base + (None,) * nd)[:nd])
+        # drop axes that don't divide their dim
+        for i, (dim, ax) in enumerate(zip(leaf.shape, spec)):
+            if ax is None:
+                continue
+            axes_tuple = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes_tuple:
+                size *= mesh.shape[a]
+            if dim % size != 0:
+                spec[i] = None
+        return P(*spec)
+
+    cspecs = jax.tree_util.tree_map_with_path(cache_spec, cache)
+    dp = batch_axes(mesh)
+    import numpy as np
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    tok_spec = P(dp) if B % n_dp == 0 and B >= n_dp else P()
+    named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    in_sh = (named(pspecs), named(cspecs), named(tok_spec),
+             NamedSharding(mesh, P()))
+    out_sh = (named(P(dp) if B % n_dp == 0 and B >= n_dp else P()),
+              named(cspecs))
+    return in_sh, out_sh

@@ -1,0 +1,109 @@
+"""In-process message transport with byte accounting and a network model.
+
+Every orchestrator↔node exchange in the protocol simulator goes through a
+``Transport``, which
+  * counts payload bytes per direction and per message tag,
+  * optionally compresses eligible float tensors to int8 (paper §5.2,
+    ``repro.kernels.act_compress``),
+  * advances a virtual clock with a latency/bandwidth model so the paper's
+    runtime equations (15–19) can be compared against 'measured' simulated
+    time.  Parallel transfers (the paper's pipelined communication) are
+    modeled with ``parallel_window``: transfers inside a window overlap and
+    cost max() instead of sum().
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class NetworkModel:
+    bandwidth_bytes_per_s: float = 1e9 / 8        # 1 Gb/s WAN link
+    rtt_s: float = 0.02
+
+    def transfer_time(self, nbytes: int) -> float:
+        return self.rtt_s + nbytes / self.bandwidth_bytes_per_s
+
+
+def payload_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif isinstance(leaf, (int, float, bool)):
+            total += 8
+    return total
+
+
+@dataclass
+class Transport:
+    network: NetworkModel = field(default_factory=NetworkModel)
+    compress_activations: bool = False
+    bytes_sent: Dict[str, int] = field(default_factory=dict)
+    n_messages: int = 0
+    clock_s: float = 0.0
+    _window: Optional[List[float]] = None
+
+    # ---- bookkeeping -----------------------------------------------------
+    def _account(self, tag: str, nbytes: int):
+        self.bytes_sent[tag] = self.bytes_sent.get(tag, 0) + nbytes
+        self.n_messages += 1
+        t = self.network.transfer_time(nbytes)
+        if self._window is not None:
+            self._window.append(t)
+        else:
+            self.clock_s += t
+
+    @contextlib.contextmanager
+    def parallel(self):
+        """Transfers issued inside this context overlap (cost = max)."""
+        outer = self._window
+        self._window = []
+        try:
+            yield
+        finally:
+            if self._window:
+                t = max(self._window)
+                if outer is not None:
+                    outer.append(t)
+                else:
+                    self.clock_s += t
+            self._window = outer
+
+    def tick(self, seconds: float):
+        """Advance the clock for compute time."""
+        self.clock_s += seconds
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_sent.values())
+
+    # ---- sending ---------------------------------------------------------
+    def send(self, tag: str, payload, *, compressible: bool = False):
+        """Returns the payload as the receiver sees it (possibly after an
+        int8 round-trip when compression is on)."""
+        if compressible and self.compress_activations:
+            from repro.kernels.act_compress import (compress, compressed_bytes,
+                                                    decompress)
+            out = []
+            nbytes = 0
+            for leaf in jax.tree.leaves(payload):
+                if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
+                                                             jnp.floating):
+                    c = compress(leaf)
+                    nbytes += compressed_bytes(c)
+                    out.append(decompress(c, leaf.shape, out_dtype=leaf.dtype))
+                else:
+                    nbytes += int(getattr(leaf, "nbytes", 8))
+                    out.append(leaf)
+            self._account(tag, nbytes)
+            return jax.tree.unflatten(jax.tree.structure(payload), out)
+        self._account(tag, payload_bytes(payload))
+        return payload

@@ -1,0 +1,10 @@
+from repro.data.datasets import (Dataset, iid_images, imbalanced_binary,
+                                 shard_cluster, shard_iid, shard_noniid,
+                                 tabular, text_tokens)
+from repro.data.pipeline import (NodeShard, VirtualBatchLoader, shard_corpus,
+                                 synthetic_corpus)
+
+__all__ = ["Dataset", "iid_images", "imbalanced_binary", "shard_cluster",
+           "shard_iid", "shard_noniid", "tabular", "text_tokens",
+           "NodeShard", "VirtualBatchLoader", "shard_corpus",
+           "synthetic_corpus"]

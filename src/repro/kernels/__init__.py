@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots of the assigned architectures.
+
+Each kernel ships as a package: ``kernel.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper), ``ref.py`` (pure-jnp
+oracle).  On this CPU container kernels run in ``interpret=True`` mode; the
+BlockSpecs are written for TPU v5e VMEM.
+"""

@@ -1,0 +1,5 @@
+from repro.kernels.act_compress.ops import compress, compressed_bytes, decompress
+from repro.kernels.act_compress.ref import dequantize_rows_ref, quantize_rows_ref
+
+__all__ = ["compress", "decompress", "compressed_bytes",
+           "quantize_rows_ref", "dequantize_rows_ref"]

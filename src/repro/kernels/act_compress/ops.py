@@ -1,0 +1,39 @@
+"""Jit'd wrappers: compress/decompress arbitrary-shape activations."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.act_compress.kernel import dequantize_rows, quantize_rows
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def compress(x, *, block_rows: int = 128, interpret: bool = True):
+    """x: (..., D) -> dict(q int8, scale f32, shape).  Rows padded to block."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    R = flat.shape[0]
+    pad = (-R) % block_rows
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    q, s = quantize_rows(flat, block_rows=block_rows, interpret=interpret)
+    return {"q": q[:R], "scale": s[:R]}
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block_rows", "interpret",
+                                             "out_dtype"))
+def decompress(payload, shape, *, out_dtype=jnp.float32, block_rows: int = 128,
+               interpret: bool = True):
+    q, s = payload["q"], payload["scale"]
+    R = q.shape[0]
+    pad = (-R) % block_rows
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        s = jnp.pad(s, (0, pad))
+    x = dequantize_rows(q, s, out_dtype=out_dtype, block_rows=block_rows,
+                        interpret=interpret)
+    return x[:R].reshape(shape)
+
+
+def compressed_bytes(payload) -> int:
+    return payload["q"].size + payload["scale"].size * 4

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the int8 row quantizer."""
+import jax.numpy as jnp
+
+
+def quantize_rows_ref(x):
+    x = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_rows_ref(q, scale, out_dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale[:, None]).astype(out_dtype)

@@ -1,0 +1,49 @@
+"""Jit'd public wrapper: GQA-aware flash attention over (B, S, H, D) layouts."""
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0.
+
+    Returns (B, Sq, H, D).  Pads sequence dims to the block size; padded KV
+    positions sit *after* the valid ones and are masked out by the causal
+    check as long as Sq == Sk (self-attention), which is the supported case.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    rep = H // KV
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    qf, _ = _pad_to(qf, 1, block_q)
+    kf, _ = _pad_to(kf, 1, block_k)
+    vf, _ = _pad_to(vf, 1, block_k)
+    scale = 1.0 / math.sqrt(D)
+    out = flash_attention_bh(qf, kf, vf, scale=scale, causal=causal,
+                             window=window, block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    out = out[:, :Sq].reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    return out

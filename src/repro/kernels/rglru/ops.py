@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the RG-LRU recurrence kernel."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru.kernel import rglru_scan_b
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rglru_scan(a, b, *, chunk: int = 64, interpret: bool = True):
+    """a, b: (B, S, W).  Pads S to the chunk size and strips the pad."""
+    B, S, W = a.shape
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    h, hT = rglru_scan_b(a, b, chunk=chunk, interpret=interpret)
+    return h[:, :S], hT

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the RG-LRU scan (associative scan)."""
+import jax
+
+
+def rglru_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan.  a, b: (B, S, W)."""
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,4 @@
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref_bh
+
+__all__ = ["ssd", "ssd_ref_bh"]

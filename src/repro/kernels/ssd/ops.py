@@ -1,0 +1,27 @@
+"""Jit'd wrapper for the SSD kernel over model-layout tensors."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_bh
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A_log, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+    """Model layout: x (B,S,H,P), dt (B,S,H), A_log (H,), Bm/Cm (B,S,N).
+
+    Returns y (B,S,H,P) and final state (B,H,P,N).  B/C are shared across
+    heads (Mamba-2 ngroups=1) and broadcast here.
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dA = (dt.astype(jnp.float32) * A).transpose(0, 2, 1).reshape(B * H, S)
+    xdt = (x.astype(jnp.float32) * dt[..., None]).transpose(0, 2, 1, 3)
+    xf = xdt.reshape(B * H, S, P)
+    Bf = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Cf = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    y, hT = ssd_bh(dA, xf, Bf, Cf, chunk=chunk, interpret=interpret)
+    y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3).astype(x.dtype)
+    return y, hT.reshape(B, H, P, N)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the SSD kernel: naive sequential state-space scan."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref_bh(dA, x, Bm, Cm):
+    """dA: (BH, S); x: (BH, S, P); Bm, Cm: (BH, S, N).
+
+    Sequential recurrence h_t = exp(dA_t) h_{t-1} + x_t B_t^T; y_t = C_t h_t.
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        da, xt, bt, ct = inp
+        h = jnp.exp(da)[:, None, None] * h + jnp.einsum("bp,bn->bpn", xt, bt)
+        y = jnp.einsum("bpn,bn->bp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((BH, P, N), jnp.float32)
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (dA.T.astype(jnp.float32), x.transpose(1, 0, 2).astype(jnp.float32),
+         Bm.transpose(1, 0, 2).astype(jnp.float32),
+         Cm.transpose(1, 0, 2).astype(jnp.float32)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), hT

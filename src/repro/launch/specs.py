@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input — nothing is allocated.
+
+``input_specs(cfg, shape)`` returns the abstract inputs for the step the
+shape's kind lowers:
+  train   -> {"tokens", "targets"[, "embeds"]}
+  prefill -> (cache, tokens[, embeds])   with empty caches of max_len=seq
+  decode  -> (cache, token, cache_len)   with full caches of max_len=seq
+
+Frontend stubs (assignment carve-out): [vlm]/[audio] shapes include an
+"embeds" ShapeDtypeStruct of precomputed patch/frame embeddings; text token
+length shrinks so the total sequence stays the assigned seq_len.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def abstract_params(model: Model, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), dtype))
+
+
+def abstract_cache(model: Model, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len, dtype))
+
+
+def text_len(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.frontend and not cfg.is_encdec:
+        return shape.seq_len - cfg.frontend_tokens
+    return shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, SDS]:
+    B = shape.global_batch
+    S = text_len(cfg, shape)
+    if shape.kind == "train":
+        specs = {"tokens": SDS((B, S), jnp.int32),
+                 "targets": SDS((B, S), jnp.int32)}
+        if cfg.frontend:
+            specs["embeds"] = SDS((B, cfg.frontend_tokens, cfg.d_model), dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.frontend:
+            specs["embeds"] = SDS((B, cfg.frontend_tokens, cfg.d_model), dtype)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"token": SDS((B,), jnp.int32),
+            "cache_len": SDS((), jnp.int32)}

@@ -1,0 +1,4 @@
+from repro.models.model import Model, build_model, cross_entropy
+from repro.models.small import SmallModel
+
+__all__ = ["Model", "SmallModel", "build_model", "cross_entropy"]

@@ -1,0 +1,313 @@
+"""Attention variants: MHA / GQA (+QKV bias), MLA (DeepSeek latent), sliding window.
+
+Three execution paths share one math definition:
+  * dense path      — materialized scores, for short sequences / CPU tests;
+  * blockwise path  — ``lax.scan`` over KV blocks with online softmax (an
+    XLA-native flash attention used for long-sequence lowering; the Pallas
+    kernel in ``repro.kernels.flash_attention`` is the TPU runtime analogue);
+  * decode path     — single query token against a KV cache.
+
+MLA is evaluated in *latent* form: queries are absorbed into the kv_lora
+latent space, so the KV cache stores only (c_kv, k_rope) per token (MQA-like),
+which is the memory saving that defines MLA.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (apply_mrope, apply_rope, dense_init,
+                                 rmsnorm, rmsnorm_init)
+
+NEG_INF = -1e30
+DENSE_MAX_SEQ = 2048        # use the blockwise path above this length
+KV_BLOCK = 1024
+
+
+# =============================================================== param init
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        m = cfg.mla
+        ks = jax.random.split(key, 8)
+        return {
+            "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype),
+            "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+            "w_uq": dense_init(ks[1], m.q_lora_rank,
+                               H * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype),
+            "w_dkv": dense_init(ks[2], d, m.kv_lora_rank, dtype),
+            "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+            "w_kr": dense_init(ks[3], d, m.qk_rope_head_dim, dtype),
+            "w_uk": dense_init(ks[4], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype),
+            "w_uv": dense_init(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype),
+            "w_o": dense_init(ks[6], H * m.v_head_dim, d, dtype),
+        }
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], d, H * hd, dtype),
+        "w_k": dense_init(ks[1], d, KV * hd, dtype),
+        "w_v": dense_init(ks[2], d, KV * hd, dtype),
+        "w_o": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((H * hd,), dtype)
+        p["b_k"] = jnp.zeros((KV * hd,), dtype)
+        p["b_v"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+# ========================================================== core attention op
+
+def _mask_bias(q_pos, k_pos, window: int):
+    """Causal (+ optional sliding-window) additive bias. Shapes broadcast."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        causal &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(causal, 0.0, NEG_INF)
+
+
+def attend_dense(q, k, v, q_pos, k_pos, window: int, scale: float):
+    """q: (B,Sq,H,dh) k,v: (B,Sk,KV,dv*). Returns (B,Sq,H,dv).
+
+    GQA without materializing repeated K/V: q-heads are grouped per kv-head
+    (reshape, not repeat) so cache reads stay at KV-head volume.
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, dh)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32) * scale
+    scores = scores + _mask_bias(q_pos, k_pos, window)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def attend_blockwise(q, k, v, q_pos, k_pos, window: int, scale: float,
+                     block: int = KV_BLOCK):
+    """Online-softmax attention scanning KV blocks (flash-style in XLA).
+
+    Memory is O(Sq * block) instead of O(Sq * Sk).  Matches ``attend_dense``
+    to float tolerance (tests assert this).
+    """
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    dv = v.shape[-1]
+    nb = -(-Sk // block)
+    pad = nb * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(B, nb, block, KV, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block, KV, dv).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(nb, block)
+    qg = q.astype(jnp.float32).reshape(B, Sq, KV, rep, dh)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, pblk = xs
+        # GQA grouped (no repeated K/V materialization)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg,
+                       kblk.astype(jnp.float32)) * scale
+        s = s + _mask_bias(q_pos, pblk, window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bgrqk,bkgd->bgrqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, rep, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, rep, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,rep,Sq,dv)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(v.dtype)
+
+
+def attend(q, k, v, q_pos, k_pos, window: int, scale: float):
+    if k.shape[1] <= DENSE_MAX_SEQ or q.shape[1] == 1:
+        return attend_dense(q, k, v, q_pos, k_pos, window, scale)
+    return attend_blockwise(q, k, v, q_pos, k_pos, window, scale)
+
+
+# ================================================================= GQA / MHA
+
+def _positions(pos0, S, B):
+    return pos0 + jnp.arange(S, dtype=jnp.int32)
+
+
+def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
+              cache_len=None):
+    """Full forward (cache=None) or decode step / prefill-with-cache.
+
+    x: (B, S, d).  When ``cache`` is given it is a dict {k, v} of
+    (B, max_len, KV, hd); ``cache_len`` is the number of valid tokens already
+    in it.  Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"])
+    k = jnp.einsum("bsd,de->bse", x, params["w_k"])
+    v = jnp.einsum("bsd,de->bse", x, params["w_v"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+
+    pos0 = jnp.asarray(0, jnp.int32) if cache_len is None else cache_len
+    q_pos = pos0 + jnp.arange(S, dtype=jnp.int32)
+    if cfg.rope == "rope":
+        q = apply_rope(q, jnp.broadcast_to(q_pos, (B, S)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(q_pos, (B, S)), cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        p3 = jnp.broadcast_to(q_pos, (3, B, S)) if positions is None else positions
+        q = apply_mrope(q, p3, cfg.rope_theta)
+        k = apply_mrope(k, p3, cfg.rope_theta)
+
+    scale = 1.0 / math.sqrt(hd)
+    if cache is None:
+        k_pos = jnp.arange(S, dtype=jnp.int32)
+        out = attend(q, k, v, q_pos, k_pos, cfg.sliding_window, scale)
+        new_cache = None
+    elif S > 1:
+        # prefill-from-empty: attend over the current keys directly, then
+        # write (only) the last `max_len` positions into the ring buffer —
+        # avoids duplicate scatter indices when S > window
+        max_len = cache["k"].shape[1]
+        W = min(S, max_len)
+        out = attend(q, k, v, q_pos, q_pos, cfg.sliding_window, scale)
+        idx = (pos0 + jnp.arange(S)[-W:]) % max_len
+        ck = cache["k"].at[:, idx].set(k[:, -W:].astype(cache["k"].dtype))
+        cv = cache["v"].at[:, idx].set(v[:, -W:].astype(cache["v"].dtype))
+        k_pos_cache = cache["pos"].at[idx].set(q_pos[-W:])
+        new_cache = {"k": ck, "v": cv, "pos": k_pos_cache}
+    else:
+        # single-token decode: the new k/v must NOT stay head-sharded (the
+        # projection output is model-sharded) or GSPMD re-gathers the whole
+        # cache to reconcile layouts — replicate the 1-token k/v instead
+        from repro.dist.constraints import constrain_batch
+        k = constrain_batch(k)
+        v = constrain_batch(v)
+        max_len = cache["k"].shape[1]
+        idx = (pos0 + jnp.arange(S)) % max_len      # ring buffer for sliding windows
+        ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+        k_pos_cache = cache["pos"].at[idx].set(q_pos)
+        out = attend(q, ck, cv, q_pos, k_pos_cache, cfg.sliding_window, scale)
+        new_cache = {"k": ck, "v": cv, "pos": k_pos_cache}
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"]), new_cache
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.sliding_window:
+        max_len = min(max_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, max_len, KV, hd), dtype),
+        "v": jnp.zeros((batch, max_len, KV, hd), dtype),
+        "pos": jnp.full((max_len,), jnp.iinfo(jnp.int32).max, jnp.int32),
+    }
+
+
+# ======================================================================== MLA
+
+def mla_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
+              cache_len=None):
+    """DeepSeek multi-head latent attention, latent (weight-absorbed) form.
+
+    Scores are computed in the kv_lora latent space: the per-head nope query
+    is projected through W_UK into the latent, concatenated with the shared
+    rope key — so attention runs as MQA with head_dim = kv_lora + rope_dim
+    and values = the latent itself (decompressed by W_UV afterwards).
+    """
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope_d, vdim, lora = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                                m.v_head_dim, m.kv_lora_rank)
+
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", cq, params["w_uq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    c_kv = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]),
+                   cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])        # shared, (B,S,rope_d)
+
+    pos0 = jnp.asarray(0, jnp.int32) if cache_len is None else cache_len
+    q_pos = pos0 + jnp.arange(S, dtype=jnp.int32)
+    q_rope = apply_rope(q_rope, jnp.broadcast_to(q_pos, (B, S)), cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], jnp.broadcast_to(q_pos, (B, S)),
+                        cfg.rope_theta)[:, :, 0, :]
+
+    # absorb q_nope into latent space: (B,S,H,lora)
+    w_uk = params["w_uk"].reshape(lora, H, nope)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    q_full = jnp.concatenate([q_lat, q_rope], axis=-1)           # (B,S,H,lora+rope)
+
+    if cache is None:
+        kv_lat, kv_rope, k_pos = c_kv, k_rope, jnp.arange(S, dtype=jnp.int32)
+        new_cache = None
+    elif S > 1:
+        # prefill-from-empty: attend over current latents, then store them
+        idx = pos0 + jnp.arange(S)
+        new_cache = {
+            "c_kv": cache["c_kv"].at[:, idx].set(c_kv.astype(cache["c_kv"].dtype)),
+            "k_rope": cache["k_rope"].at[:, idx].set(
+                k_rope.astype(cache["k_rope"].dtype)),
+            "pos": cache["pos"].at[idx].set(q_pos),
+        }
+        kv_lat, kv_rope, k_pos = c_kv, k_rope, q_pos
+    else:
+        idx = pos0 + jnp.arange(S)
+        kv_lat = cache["c_kv"].at[:, idx].set(c_kv.astype(cache["c_kv"].dtype))
+        kv_rope = cache["k_rope"].at[:, idx].set(k_rope.astype(cache["k_rope"].dtype))
+        k_pos = cache["pos"].at[idx].set(q_pos)
+        new_cache = {"c_kv": kv_lat, "k_rope": kv_rope, "pos": k_pos}
+
+    k_full = jnp.concatenate([kv_lat, kv_rope], axis=-1)[:, :, None, :]  # MQA
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    out_lat = attend(q_full, k_full, kv_lat[:, :, None, :], q_pos, k_pos,
+                     0, scale)                                   # (B,S,H,lora)
+    w_uv = params["w_uv"].reshape(lora, H, vdim)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, w_uv).reshape(B, S, H * vdim)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"]), new_cache
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((max_len,), jnp.iinfo(jnp.int32).max, jnp.int32),
+    }
+
+
+# ============================================================ unified facade
+
+def attention_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    return attn_init(key, cfg, dtype)
+
+
+def attention_apply(params, cfg: ModelConfig, x, **kw):
+    if cfg.attention == "mla":
+        return mla_apply(params, cfg, x, **kw)
+    return gqa_apply(params, cfg, x, **kw)
+
+
+def attention_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    if cfg.attention == "mla":
+        return mla_cache_init(cfg, batch, max_len, dtype)
+    return gqa_cache_init(cfg, batch, max_len, dtype)

@@ -1,0 +1,109 @@
+"""Unified residual block: mixer (attn | rglru | ssm) + FFN (dense | moe | none).
+
+A block optionally carries a cross-attention sublayer (encoder-decoder
+architectures).  Params and caches are plain pytrees so stacks of blocks can
+be scanned with ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe, rglru, ssm
+from repro.models.layers import rmsnorm, rmsnorm_init, swiglu, swiglu_init
+
+
+def ffn_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    if cfg.ssm is not None and cfg.pattern[layer_idx] == "ssm" and cfg.d_ff == 0:
+        return "none"
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense:
+        return "moe"
+    if cfg.d_ff == 0:
+        return "none"
+    return "dense"
+
+
+def block_init(key, cfg: ModelConfig, kind: str, ffn: str, *, cross: bool = False,
+               dtype=jnp.float32):
+    kmix, kffn, kcross = jax.random.split(key, 3)
+    p = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["mixer"] = attention.attention_init(kmix, cfg, dtype)
+    elif kind == "rglru":
+        p["mixer"] = rglru.rglru_init(kmix, cfg, dtype)
+    elif kind == "ssm":
+        p["mixer"] = ssm.mamba2_init(kmix, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["cross_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attention.attn_init(kcross, cfg, dtype)
+    if ffn == "dense":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = swiglu_init(kffn, cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "moe":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        p["ffn"] = moe.moe_init(kffn, cfg, dtype)
+    return p
+
+
+def _mixer_apply(params, cfg, kind, h, **kw):
+    if kind == "attn":
+        return attention.attention_apply(params, cfg, h, **kw)
+    if kind == "rglru":
+        return rglru.rglru_apply(params, cfg, h, **kw)
+    if kind == "ssm":
+        return ssm.mamba2_apply(params, cfg, h, **kw)
+    raise ValueError(kind)
+
+
+def cross_attend(params, cfg: ModelConfig, h, enc_out):
+    """Cross-attention sublayer (queries from h, keys/values from enc_out)."""
+    import math
+    B, S, d = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    Se = enc_out.shape[1]
+    q = jnp.einsum("bsd,de->bse", h, params["w_q"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", enc_out, params["w_k"]).reshape(B, Se, KV, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out, params["w_v"]).reshape(B, Se, KV, hd)
+    # bidirectional: all encoder positions visible
+    q_pos = jnp.full((S,), Se, jnp.int32)
+    k_pos = jnp.arange(Se, dtype=jnp.int32)
+    out = attention.attend(q, k, v, q_pos, k_pos, 0, 1.0 / math.sqrt(hd))
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * hd), params["w_o"])
+
+
+def block_apply(params, cfg: ModelConfig, kind: str, ffn: str, h, *,
+                cache=None, cache_len=None, positions=None, enc_out=None):
+    """Returns (h, new_cache, aux_loss)."""
+    from repro.dist.constraints import constrain_batch
+    h = constrain_batch(h)
+    mixed, new_cache = _mixer_apply(params["mixer"], cfg, kind,
+                                    rmsnorm(params["norm1"], h, cfg.norm_eps),
+                                    cache=cache, cache_len=cache_len,
+                                    positions=positions)
+    h = h + mixed
+    if "cross" in params and enc_out is not None:
+        h = h + cross_attend(params["cross"], cfg,
+                             rmsnorm(params["cross_norm"], h, cfg.norm_eps),
+                             enc_out)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        h = h + swiglu(params["ffn"], rmsnorm(params["norm2"], h, cfg.norm_eps))
+    elif ffn == "moe":
+        out, aux = moe.moe_apply(params["ffn"], cfg,
+                                 rmsnorm(params["norm2"], h, cfg.norm_eps))
+        h = h + out
+    return constrain_batch(h), new_cache, aux
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.float32):
+    if kind == "attn":
+        return attention.attention_cache_init(cfg, batch, max_len, dtype)
+    if kind == "rglru":
+        return rglru.rglru_cache_init(cfg, batch, dtype)
+    if kind == "ssm":
+        return ssm.mamba2_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)

@@ -1,0 +1,136 @@
+"""Encoder-decoder backbone (SeamlessM4T language/decoder transformer).
+
+Per the assignment, the modality frontend (mel-spectrogram + conformer
+feature extractor) is a STUB: the encoder consumes precomputed frame
+embeddings (B, F, d_model) supplied by ``input_specs``.  The decoder is a
+standard causal transformer with cross-attention into the encoder output.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, blocks
+from repro.models.layers import (dense_init, embed_init, rmsnorm,
+                                 rmsnorm_init, swiglu, swiglu_init)
+
+
+# ----------------------------------------------------------------- encoder
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention.attn_init(k1, cfg, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "ffn": swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _enc_attend(params, cfg: ModelConfig, h):
+    """Bidirectional self-attention (no causal mask)."""
+    B, S, d = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", h, params["w_q"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", h, params["w_k"]).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,de->bse", h, params["w_v"]).reshape(B, S, KV, hd)
+    # bidirectional: give every query the max position so causal check passes
+    q_pos = jnp.full((S,), S, jnp.int32)
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    out = attention.attend(q, k, v, q_pos, k_pos, 0, 1.0 / math.sqrt(hd))
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, H * hd), params["w_o"])
+
+
+def _enc_layer_apply(params, cfg, h):
+    h = h + _enc_attend(params["attn"], cfg, rmsnorm(params["norm1"], h, cfg.norm_eps))
+    h = h + swiglu(params["ffn"], rmsnorm(params["norm2"], h, cfg.norm_eps))
+    return h
+
+
+# ------------------------------------------------------------------- model
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, kd, kemb, khead, kdec = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    encoder = jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    decoder = jax.vmap(
+        lambda k: blocks.block_init(k, cfg, "attn", "dense", cross=True,
+                                    dtype=dtype))(dec_keys)
+    return {
+        "embed": embed_init(kemb, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "encoder": encoder,
+        "decoder": decoder,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "head": dense_init(khead, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, F, d_model) stubbed frontend embeddings."""
+    def body(h, lp):
+        return _enc_layer_apply(lp, cfg, h), None
+    h, _ = jax.lax.scan(body, frames, params["encoder"])
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _dec_stack(params, cfg, h, enc_out, caches=None, cache_len=None):
+    if caches is None:
+        def body(hh, lp):
+            hh, _, _ = blocks.block_apply(lp, cfg, "attn", "dense", hh,
+                                          enc_out=enc_out)
+            return hh, None
+        h, _ = jax.lax.scan(body, h, params["decoder"])
+        return h, None
+
+    def body(hh, xs):
+        lp, c = xs
+        hh, nc, _ = blocks.block_apply(lp, cfg, "attn", "dense", hh, cache=c,
+                                       cache_len=cache_len, enc_out=enc_out)
+        return hh, nc
+    h, new_caches = jax.lax.scan(body, h, (params["decoder"], caches))
+    return h, new_caches
+
+
+def forward(params, cfg: ModelConfig, tokens, extra_embeds=None, positions=None):
+    """tokens: (B, S) decoder input; extra_embeds: (B, F, d) audio frames."""
+    enc_out = encode(params, cfg, extra_embeds)
+    h = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    h, _ = _dec_stack(params, cfg, h, enc_out)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"]), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    one = attention.attention_cache_init(cfg, batch, max_len, dtype)
+    per_layer = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), one)
+    # encoder output is computed at prefill and carried in the cache
+    enc = jnp.zeros((batch, cfg.frontend_tokens or 1, cfg.d_model), dtype)
+    return {"self": per_layer, "enc_out": enc}
+
+
+def prefill(params, cfg: ModelConfig, caches, tokens, extra_embeds=None):
+    """Encode the (stubbed) frames, fill decoder self-attn caches for the
+    prompt, return last-position logits."""
+    enc_out = encode(params, cfg, extra_embeds)
+    h = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    h, new_self = _dec_stack(params, cfg, h, enc_out, caches["self"],
+                             jnp.asarray(0, jnp.int32))
+    h = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"])[:, 0]
+    return logits, {"self": new_self, "enc_out": enc_out.astype(caches["enc_out"].dtype)}
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, cache_len,
+                positions=None):
+    h = params["embed"][token[:, None]] * math.sqrt(cfg.d_model)
+    h, new_self = _dec_stack(params, cfg, h, caches["enc_out"], caches["self"],
+                             cache_len)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"])[:, 0]
+    return logits, {"self": new_self, "enc_out": caches["enc_out"]}

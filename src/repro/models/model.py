@@ -1,0 +1,127 @@
+"""Unified model facade: build once from a ModelConfig, use everywhere.
+
+API (all pure functions closed over the config):
+  m = build_model(cfg)
+  params = m.init(key, dtype)
+  logits, aux = m.forward(params, tokens, extra_embeds=None)
+  loss, metrics = m.loss(params, batch)
+  cache = m.init_cache(batch, max_len, dtype)
+  logits, cache = m.decode_step(params, cache, token, cache_len)
+  h1 = m.block0(params, m.embed(params, tokens))      # TL split points
+  logits, aux = m.tail(params, h1)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+
+def cross_entropy(logits, targets, mask=None):
+    """Mean next-token CE.  logits: (B,S,V); targets: (B,S) int32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable            # (params, tokens, extra_embeds=None) -> (logits, aux)
+    loss: Callable               # (params, batch) -> (scalar, metrics)
+    init_cache: Callable         # (batch, max_len, dtype) -> cache
+    decode_step: Callable        # (params, cache, token, cache_len) -> (logits, cache)
+    prefill: Callable = None     # (params, cache, tokens, extra) -> (logits, cache)
+    embed: Callable = None
+    block0: Callable = None
+    tail: Callable = None
+
+
+MTP_WEIGHT = 0.3
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.is_encdec:
+        return _build_encdec(cfg)
+    return _build_decoder_lm(cfg)
+
+
+def _build_decoder_lm(cfg: ModelConfig) -> Model:
+    F = cfg.frontend_tokens if cfg.frontend else 0
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        targets = batch["targets"]
+        extra = batch.get("embeds")
+        if cfg.mtp_depth:
+            logits, h, aux = transformer.forward_with_hidden(
+                params, cfg, tokens, extra)
+        else:
+            logits, aux = transformer.forward(params, cfg, tokens, extra)
+            h = None
+        # frontend positions are not scored
+        logits_txt = logits[:, F:] if F else logits
+        mask = batch.get("mask")
+        ce = cross_entropy(logits_txt, targets, mask)
+        total = ce + aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp_depth:
+            h_txt = h[:, F:] if F else h
+            mtp = transformer.mtp_logits(params, cfg, tokens, h_txt)
+            # MTP scores token t+2: shift targets left by one more step
+            t2 = jnp.roll(targets, -1, axis=1)
+            valid = jnp.ones_like(t2).at[:, -2:].set(0)
+            mtp_ce = cross_entropy(mtp, t2, valid)
+            total = total + MTP_WEIGHT * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = total
+        return total, metrics
+
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: transformer.init_params(key, cfg, dtype),
+        forward=lambda p, tokens, extra_embeds=None, positions=None:
+            transformer.forward(p, cfg, tokens, extra_embeds, positions),
+        loss=loss_fn,
+        init_cache=lambda batch, max_len, dtype=jnp.float32:
+            transformer.init_cache(cfg, batch, max_len, dtype),
+        decode_step=lambda p, cache, token, cache_len:
+            transformer.decode_step(p, cfg, cache, token, cache_len),
+        prefill=lambda p, cache, tokens, extra_embeds=None:
+            transformer.prefill(p, cfg, cache, tokens, extra_embeds),
+        embed=lambda p, tokens, extra_embeds=None:
+            transformer.embed_tokens(p, cfg, tokens, extra_embeds),
+        block0=lambda p, h: transformer.block0(p, cfg, h)[0],
+        tail=lambda p, h1: transformer.tail(p, cfg, h1),
+    )
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    def loss_fn(params, batch):
+        logits, aux = encdec.forward(params, cfg, batch["tokens"],
+                                     batch.get("embeds"))
+        ce = cross_entropy(logits, batch["targets"], batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux": aux, "loss": ce + aux}
+
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: encdec.init_params(key, cfg, dtype),
+        forward=lambda p, tokens, extra_embeds=None, positions=None:
+            encdec.forward(p, cfg, tokens, extra_embeds, positions),
+        loss=loss_fn,
+        init_cache=lambda batch, max_len, dtype=jnp.float32:
+            encdec.init_cache(cfg, batch, max_len, dtype),
+        decode_step=lambda p, cache, token, cache_len:
+            encdec.decode_step(p, cfg, cache, token, cache_len),
+        prefill=lambda p, cache, tokens, extra_embeds=None:
+            encdec.prefill(p, cfg, cache, tokens, extra_embeds),
+    )

@@ -1,0 +1,127 @@
+"""Mixture-of-experts FFN (DeepSeek-style: shared + routed top-k).
+
+Dispatch is *sort-free scatter/gather with per-group capacity* — the
+TPU-native expert-parallel layout:
+
+  tokens are grouped along the batch dim (groups shard on the ``data`` mesh
+  axis); within a group each token's top-k choices receive a slot
+  ``(expert, rank)`` where rank = #earlier tokens in the group that chose the
+  same expert.  Tokens overflowing ``capacity`` are dropped (their combine
+  weight contribution is zero), matching capacity-factor routing used by
+  GSPMD MoE systems.  The expert FFN then runs as one batched einsum over
+  ``(groups, experts, capacity, d)`` with experts sharded on the ``model``
+  axis — gather/scatter carries the all-to-all, the einsum carries the FLOPs
+  (so cost_analysis reports *active* FLOPs only).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    k_router, k_exp, k_shared = jax.random.split(key, 3)
+    d, dff = cfg.d_model, m.d_ff_expert
+    ek = jax.random.split(k_exp, 3)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(k_router, d, m.n_routed_experts, dtype),
+        # experts stacked on a leading E axis (shards on the "model" mesh axis)
+        "w_gate": (jax.random.normal(ek[0], (m.n_routed_experts, d, dff)) * std).astype(dtype),
+        "w_up": (jax.random.normal(ek[1], (m.n_routed_experts, d, dff)) * std).astype(dtype),
+        "w_down": (jax.random.normal(ek[2], (m.n_routed_experts, dff, d))
+                   * (1.0 / math.sqrt(dff))).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = swiglu_init(k_shared, d, dff * m.n_shared_experts, dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(tokens_per_group * m.top_k * m.capacity_factor
+                        / m.n_routed_experts))
+    return max(cap, m.top_k if tokens_per_group == 1 else 1)
+
+
+# When set (via set_expert_parallel_mesh), moe_apply delegates to the
+# shard_map expert-parallel path (models/moe_ep.py) — the §Perf beyond-paper
+# dispatch with exactly two all_to_all per layer.
+_EP_MESH = None
+
+
+def set_expert_parallel_mesh(mesh):
+    global _EP_MESH
+    _EP_MESH = mesh
+
+
+def moe_apply(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (out, aux_loss).  Groups = batch rows."""
+    if _EP_MESH is not None:
+        from repro.models.moe_ep import moe_apply_ep
+        from repro.dist.sharding import batch_axes
+        return moe_apply_ep(params, cfg, x, _EP_MESH,
+                            data_axis=tuple(batch_axes(_EP_MESH)))
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_routed_experts, m.top_k
+    C = _capacity(S, cfg)
+    xt = x.reshape(B, S, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)                     # (G,T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)   # renormalize top-k
+
+    # ---- auxiliary load-balance loss (DeepSeek eq. style: E * mean f_i P_i)
+    one_hot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)     # (G,T,k,E)
+    f = one_hot.sum(axis=2).mean(axis=1)                           # (G,E) token frac * k
+    P = probs.mean(axis=1)                                         # (G,E)
+    aux = (E * (f / k * P).sum(-1)).mean() * m.router_aux_weight
+
+    # ---- slot assignment: rank of each (token, choice) within its expert.
+    # Sort-based ranking: stable argsort by expert id gives (expert, token)
+    # order, so rank-within-expert = sorted position - expert segment start —
+    # identical semantics to a one-hot cumsum (earlier tokens win slots) but
+    # O(T·k·log) instead of an O(T·k·E) materialized buffer per layer.
+    flat_e = expert_idx.reshape(B, S * k)                          # (G, T*k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)               # (G, T*k)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    counts = jnp.zeros((B, E), jnp.int32).at[
+        jnp.arange(B)[:, None], flat_e].add(1)                     # (G, E)
+    starts = jnp.cumsum(counts, axis=1) - counts                   # exclusive
+    rank_sorted = jnp.arange(S * k)[None, :] - jnp.take_along_axis(
+        starts, sorted_e, axis=1)                                  # (G, T*k)
+    pos = jnp.zeros_like(flat_e).at[
+        jnp.arange(B)[:, None], order].set(rank_sorted)            # unsort
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)                # overflow -> sink row
+
+    # ---- dispatch: scatter token copies into (E*C+1, d) buffers per group
+    x_rep = jnp.repeat(xt, k, axis=1)                              # (G, T*k, d)
+    buf = jnp.zeros((B, E * C + 1, d), xt.dtype)
+    buf = buf.at[jnp.arange(B)[:, None], slot].add(x_rep)
+    expert_in = buf[:, : E * C].reshape(B, E, C, d)
+
+    # ---- expert FFN: batched swiglu over (G, E, C, d)
+    g = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+
+    # ---- combine: gather each choice's slot output, weight by gate
+    out_buf = expert_out.reshape(B, E * C, d)
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((B, 1, d), out_buf.dtype)], axis=1)
+    gathered = out_buf[jnp.arange(B)[:, None], slot]               # (G, T*k, d)
+    w = (gate.reshape(B, S * k) * keep).astype(gathered.dtype)
+    combined = (gathered * w[..., None]).reshape(B, S, k, d).sum(axis=2)
+
+    if m.n_shared_experts:
+        combined = combined + swiglu(params["shared"], x)
+    return combined, aux

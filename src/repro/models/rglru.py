@@ -1,0 +1,105 @@
+"""Griffin recurrent block: RG-LRU (real-gated linear recurrent unit).
+[arXiv:2402.19427]
+
+    r_t = sigmoid(W_a x_t + b_a)             (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)             (input gate)
+    log a_t = -c * softplus(Λ) * r_t          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is a diagonal linear scan — evaluated with
+``jax.lax.associative_scan`` (XLA-native, O(log S) depth).  The Pallas TPU
+kernel in ``repro.kernels.rglru`` computes the same scan chunk-sequentially
+in VMEM.  The full Griffin block is: linear in -> temporal conv -> RG-LRU,
+gated by a parallel GeLU branch, linear out.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (causal_conv1d, causal_conv1d_init,
+                                 causal_conv1d_step, dense_init)
+
+C_FACTOR = 8.0
+
+
+def rglru_scan(a, bx):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + bx_t via associative scan.
+
+    a, bx: (B, S, W) with a in (0, 1).  Returns h: (B, S, W).
+    """
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    ah, bh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return bh
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c spans ~(0.9, 0.999) as in the paper
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / C_FACTOR))
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),          # recurrent branch in
+        "w_gate": dense_init(ks[1], d, w, dtype),       # gelu gate branch
+        "conv": causal_conv1d_init(ks[2], w, 4, dtype),
+        "w_a": dense_init(ks[3], w, w, dtype, scale=0.1),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_i": dense_init(ks[4], w, w, dtype, scale=0.1),
+        "b_i": jnp.zeros((w,), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _gates(params, xw):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xw, params["w_a"]) + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xw, params["w_i"]) + params["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta, i.astype(jnp.float32)
+
+
+def rglru_apply(params, cfg: ModelConfig, x, *, cache=None, cache_len=None,
+                positions=None):
+    """x: (B,S,d). cache: {"conv": (B,3,W), "h": (B,W)}."""
+    B, S, d = x.shape
+    xw = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"]))
+
+    if cache is None or S > 1:
+        # full scan (training, or prefill-from-empty when a cache is given)
+        xc = causal_conv1d(params["conv"], xw)
+        a, beta, i = _gates(params, xc)
+        bx = beta * i * xc.astype(jnp.float32)
+        h = rglru_scan(a, bx)
+        new_cache = None
+        if cache is not None:
+            k = params["conv"]["w"].shape[0] - 1
+            new_cache = {"conv": xw[:, -k:], "h": h[:, -1]}
+    else:
+        conv_state, h_prev = cache["conv"], cache["h"]
+        conv_state, xc1 = causal_conv1d_step(params["conv"], conv_state, xw[:, 0])
+        a, beta, i = _gates(params, xc1)
+        h1 = a * h_prev + beta * i * xc1.astype(jnp.float32)
+        h = h1[:, None, :]
+        new_cache = {"conv": conv_state, "h": h1}
+
+    out = h.astype(x.dtype) * gate
+    return jnp.einsum("bsw,wd->bsd", out, params["w_out"]), new_cache
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

@@ -1,0 +1,164 @@
+"""Paper-scale models (MLP / ConvNet / tiny Transformer) for the faithful
+TL reproduction — §4.1.2 of the paper.
+
+These expose the *layer-split* API the TL protocol needs:
+  first_layer(params, x)      -> X^(1)          (computed on the node)
+  tail_layers(params, x1)     -> logits         (recomputed on the orchestrator)
+  forward = tail_layers ∘ first_layer
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import SmallModelConfig
+
+
+def _dense(key, i, o):
+    return {"w": jax.random.normal(key, (i, o)) / math.sqrt(i),
+            "b": jnp.zeros((o,))}
+
+
+def _apply_dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------- MLP
+
+def mlp_init(key, cfg: SmallModelConfig):
+    dims = (int(jnp.prod(jnp.asarray(cfg.in_shape))),) + cfg.hidden + (cfg.n_classes,)
+    keys = jax.random.split(key, len(dims) - 1)
+    return {"layers": tuple(_dense(k, i, o)
+                            for k, i, o in zip(keys, dims[:-1], dims[1:]))}
+
+
+def mlp_first(params, x):
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.elu(_apply_dense(params["layers"][0], x))
+
+
+def mlp_tail(params, h):
+    for p in params["layers"][1:-1]:
+        h = jax.nn.elu(_apply_dense(p, h))
+    return _apply_dense(params["layers"][-1], h)
+
+
+# ------------------------------------------------------------------ ConvNet
+
+def conv_init(key, cfg: SmallModelConfig):
+    chans = (cfg.in_shape[-1],) + cfg.conv_channels
+    keys = jax.random.split(key, len(cfg.conv_channels) + len(cfg.hidden) + 1)
+    convs = tuple(
+        {"w": jax.random.normal(keys[i], (3, 3, chans[i], chans[i + 1]))
+              / math.sqrt(9 * chans[i]),
+         "b": jnp.zeros((chans[i + 1],))}
+        for i in range(len(cfg.conv_channels)))
+    side = cfg.in_shape[0] // (2 ** len(cfg.conv_channels))
+    flat = side * side * chans[-1]
+    dims = (flat,) + cfg.hidden + (cfg.n_classes,)
+    dense = tuple(_dense(keys[len(convs) + j], dims[j], dims[j + 1])
+                  for j in range(len(dims) - 1))
+    return {"convs": convs, "dense": dense}
+
+
+def _conv_block(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+    y = jax.nn.relu(y)
+    return jax.lax.reduce_window(y, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def conv_first(params, x):
+    return _conv_block(params["convs"][0], x)
+
+
+def conv_tail(params, h):
+    for p in params["convs"][1:]:
+        h = _conv_block(p, h)
+    h = h.reshape(h.shape[0], -1)
+    for p in params["dense"][:-1]:
+        h = jax.nn.relu(_apply_dense(p, h))
+    return _apply_dense(params["dense"][-1], h)
+
+
+# --------------------------------------------------------- tiny transformer
+
+def tfm_init(key, cfg: SmallModelConfig):
+    d, H, L = cfg.d_model, cfg.n_heads, cfg.n_layers
+    ks = jax.random.split(key, 2 + 5 * L)
+    params = {"embed": jax.random.normal(ks[0], (cfg.vocab_size, d)) * 0.02,
+              "pos": jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02,
+              "blocks": [], "out": None}
+    blocks = []
+    for l in range(L):
+        o = 2 + 5 * l
+        blocks.append({
+            "wq": _dense(ks[o], d, d), "wk": _dense(ks[o + 1], d, d),
+            "wv": _dense(ks[o + 2], d, d), "wo": _dense(ks[o + 3], d, d),
+            "ff1": _dense(ks[o + 4], d, 4 * d),
+            "ff2": _dense(jax.random.fold_in(ks[o + 4], 1), 4 * d, d),
+        })
+    params["blocks"] = tuple(blocks)
+    params["out"] = _dense(jax.random.fold_in(key, 99), d, cfg.n_classes)
+    return params
+
+
+def _tfm_block(p, h, n_heads):
+    B, S, d = h.shape
+    hd = d // n_heads
+    q = _apply_dense(p["wq"], h).reshape(B, S, n_heads, hd)
+    k = _apply_dense(p["wk"], h).reshape(B, S, n_heads, hd)
+    v = _apply_dense(p["wv"], h).reshape(B, S, n_heads, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    a = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, d)
+    h = h + _apply_dense(p["wo"], o)
+    h = h + _apply_dense(p["ff2"], jax.nn.relu(_apply_dense(p["ff1"], h)))
+    return h
+
+
+def tfm_first(params, x, n_heads=4):
+    """x: (B, S) int tokens."""
+    h = params["embed"][x] + params["pos"][None, : x.shape[1]]
+    return _tfm_block(params["blocks"][0], h, n_heads)
+
+
+def tfm_tail(params, h, n_heads=4):
+    for p in params["blocks"][1:]:
+        h = _tfm_block(p, h, n_heads)
+    return _apply_dense(params["out"], h.mean(axis=1))
+
+
+# ------------------------------------------------------------------- facade
+
+class SmallModel:
+    """Split-forward classification model for the TL protocol."""
+
+    def __init__(self, cfg: SmallModelConfig):
+        self.cfg = cfg
+        fam = cfg.family
+        self._init = {"mlp": mlp_init, "conv": conv_init,
+                      "transformer": tfm_init}[fam]
+        if fam == "transformer":
+            self.first_layer = lambda p, x: tfm_first(p, x, cfg.n_heads)
+            self.tail_layers = lambda p, h: tfm_tail(p, h, cfg.n_heads)
+        elif fam == "conv":
+            self.first_layer, self.tail_layers = conv_first, conv_tail
+        else:
+            self.first_layer, self.tail_layers = mlp_first, mlp_tail
+
+    def init(self, key):
+        return self._init(key, self.cfg)
+
+    def forward(self, params, x):
+        return self.tail_layers(params, self.first_layer(params, x))
+
+    def loss(self, params, x, y):
+        logits = self.forward(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()

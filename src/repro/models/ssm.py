@@ -1,0 +1,195 @@
+"""Mamba-2 block with SSD (state-space duality) mixing. [arXiv:2405.21060]
+
+The SSD scan is the chunked formulation: within a chunk attention-like
+(quadratic in chunk size), across chunks a linear recurrence over the
+(heads, head_dim, d_state) state.  ``repro.kernels.ssd`` is the Pallas TPU
+kernel for the same computation; this module uses the XLA-native chunked
+path so it lowers on any backend.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (causal_conv1d, causal_conv1d_init,
+                                 causal_conv1d_step, dense_init, rmsnorm,
+                                 rmsnorm_init)
+
+
+# ------------------------------------------------------------ chunked SSD op
+
+def ssd_chunked(x, dt, A_log, Bmat, Cmat, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   inputs (already conv'd/activated)
+    dt: (B, S, H)      softplus'd timestep
+    A_log: (H,)        state decay log (A = -exp(A_log))
+    Bmat, Cmat: (B, S, N)  shared across heads (ngroups=1)
+    Returns y (B, S, H, P) and final state (B, H, P, N).
+    """
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, "sequence must be divisible by chunk"
+
+    A = -jnp.exp(A_log.astype(jnp.float32))                     # (H,)
+    dA = dt.astype(jnp.float32) * A                             # (B,S,H)  log-decay
+    xdt = x.astype(jnp.float32) * dt[..., None]                 # dt-scaled input
+
+    # reshape into chunks
+    c = lambda t: t.reshape(B, nc, chunk, *t.shape[2:])
+    xc, dAc = c(xdt), c(dA)
+    Bc, Cc = c(Bmat.astype(jnp.float32)), c(Cmat.astype(jnp.float32))
+
+    seg = jnp.cumsum(dAc, axis=2)                               # (B,nc,ck,H)
+    # intra-chunk (quadratic within chunk): decay(t,s) = exp(seg_t - seg_s), s<=t
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]         # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: exp(rel) overflows for s>t and inf*0 NaNs the backward
+    rel = jnp.where(tri[None, None, :, :, None], rel, -1e9)
+    decay = jnp.exp(rel)
+    scores = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)              # (B,nc,t,s)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", scores, decay, xc)
+
+    # chunk summary states: state_c = sum_s exp(seg_end - seg_s) * x_s B_s^T
+    decay_end = jnp.exp(seg[:, :, -1:, :] - seg)                # (B,nc,ck,H)
+    states = jnp.einsum("bcsh,bcshp,bcsn->bchpn", decay_end, xc, Bc)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                     # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                          # emit state *before* chunk
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    hT, h_before = jax.lax.scan(
+        step,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_before = h_before.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_t += C_t . (decay(t,start) * h_before)
+    decay_in = jnp.exp(seg)                                     # (B,nc,ck,H)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", Cc, decay_in, h_before)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(x.dtype), hT
+
+
+def ssd_ref(x, dt, A_log, Bmat, Cmat):
+    """O(S^2) reference (naive materialized) — used by tests as oracle."""
+    B, S, H, P = x.shape
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dA = dt.astype(jnp.float32) * A
+    seg = jnp.cumsum(dA, axis=1)                                # (B,S,H)
+    rel = seg[:, :, None, :] - seg[:, None, :, :]               # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    decay = jnp.exp(jnp.where(tri[None, :, :, None], rel, -1e9))
+    scores = jnp.einsum("btn,bsn->bts", Cmat.astype(jnp.float32),
+                        Bmat.astype(jnp.float32))
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    y = jnp.einsum("bts,btsh,bshp->bthp", scores, decay, xdt)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------- Mamba2 block
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.n_heads(d)
+    ks = jax.random.split(key, 6)
+    conv_ch = di + 2 * s.d_state                # conv over [x, B, C]
+    return {
+        # fused input projection -> [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * di + 2 * s.d_state + H, dtype),
+        "conv": causal_conv1d_init(ks[1], conv_ch, s.conv_kernel, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": rmsnorm_init(di, dtype),
+        "w_out": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_in(proj, di, N, H):
+    z = proj[..., :di]
+    x = proj[..., di:2 * di]
+    Bm = proj[..., 2 * di:2 * di + N]
+    Cm = proj[..., 2 * di + N:2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N:]
+    return z, x, Bm, Cm, dt
+
+
+def mamba2_apply(params, cfg: ModelConfig, x, *, cache=None, cache_len=None,
+                 positions=None):
+    """x: (B,S,d). cache: {"conv": (B,k-1,conv_ch), "state": (B,H,P,N)}."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di, N, H, P = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xs, Bm, Cm, dt = _split_in(proj, di, N, H)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+
+    if cache is None or S > 1:
+        # full scan (training, or prefill-from-empty when a cache is given)
+        conv_out = jax.nn.silu(causal_conv1d(params["conv"], conv_in))
+        xs, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + N],
+                      conv_out[..., di + N:])
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+        xh = xs.reshape(B, S, H, P)
+        pad = (-S) % s.chunk_size
+        if pad:
+            # pad with dt=0, x=0: decay exp(0·A)=1 and zero input, so the
+            # final state hT passes through padding unchanged (exact)
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, hT = ssd_chunked(xh, dt, params["A_log"], Bm, Cm, s.chunk_size)
+        y = y[:, :S]
+        y = y + params["D"][None, None, :, None] * xh[:, :S]
+        new_cache = None
+        if cache is not None:
+            k = s.conv_kernel - 1
+            new_cache = {"conv": conv_in[:, -k:].astype(cache["conv"].dtype),
+                         "state": hT}
+        y = y.reshape(B, S, di).astype(x.dtype)   # keep dtype scan-stable
+    else:
+        # decode: one step through conv state + SSM state
+        conv_state, ssm_state = cache["conv"], cache["state"]
+        conv_state, conv_out = causal_conv1d_step(params["conv"], conv_state,
+                                                  conv_in[:, 0])
+        conv_out = jax.nn.silu(conv_out)
+        xs1, Bm1, Cm1 = (conv_out[..., :di], conv_out[..., di:di + N],
+                         conv_out[..., di + N:])
+        dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+        xh = xs1.reshape(B, H, P)
+        A = -jnp.exp(params["A_log"])
+        decay = jnp.exp(dt1 * A)                                 # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xh * dt1[..., None], Bm1.astype(xh.dtype))
+        ssm_state = ssm_state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cm1.astype(ssm_state.dtype))
+        y = y + params["D"][None, :, None] * xh
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        new_cache = {"conv": conv_state, "state": ssm_state}
+
+    y = rmsnorm(params["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"]), new_cache
+
+
+def mamba2_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, N, H, P = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, di + 2 * N), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }

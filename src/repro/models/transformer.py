@@ -1,0 +1,336 @@
+"""Decoder-only language model with scan-over-layer-cycles.
+
+Layers are organized as ``prefix + n_cycles * pattern + suffix``:
+
+* ``prefix``  — individually-parameterized layers (MoE archs put their
+  ``first_k_dense`` dense-FFN layers here);
+* ``cycles``  — the repeating block pattern (len 1 for uniform stacks,
+  ("rglru","rglru","attn") for Griffin), parameters stacked on a leading
+  cycle axis and executed with ``jax.lax.scan`` so compiled HLO size is
+  O(pattern), not O(depth);
+* ``suffix``  — pattern remainder (e.g. Griffin 38 = 12*3 + 2).
+
+The Traversal-Learning split points are first-class:
+``embed_tokens`` → ``block0`` (produces the paper's X^(1)) → ``tail``
+(everything the orchestrator recomputes during centralized BP).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.layers import dense_init, embed_init, rmsnorm, rmsnorm_init
+
+
+# ------------------------------------------------------------------ planning
+
+@dataclass(frozen=True)
+class StackPlan:
+    prefix: Tuple[int, ...]      # absolute layer indices
+    n_cycles: int
+    pattern: Tuple[str, ...]
+    cycle_start: int             # absolute index of first scanned layer
+    suffix: Tuple[int, ...]
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    patt = cfg.block_pattern or (("ssm",) if cfg.arch_type == "ssm" else ("attn",))
+    n_prefix = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    remaining = cfg.n_layers - n_prefix
+    n_cycles = remaining // len(patt)
+    n_suffix = remaining % len(patt)
+    return StackPlan(
+        prefix=tuple(range(n_prefix)),
+        n_cycles=n_cycles,
+        pattern=patt,
+        cycle_start=n_prefix,
+        suffix=tuple(range(cfg.n_layers - n_suffix, cfg.n_layers)),
+    )
+
+
+# ---------------------------------------------------------------------- init
+
+def _cycle_block_init(key, cfg, kind, layer_idx, dtype):
+    return blocks.block_init(key, cfg, kind, blocks.ffn_kind(cfg, layer_idx),
+                             dtype=dtype)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    plan = stack_plan(cfg)
+    n_keys = 4 + len(plan.prefix) + len(plan.suffix) + 1
+    ks = list(jax.random.split(key, n_keys))
+    p: dict = {"embed": embed_init(ks.pop(), cfg.vocab_size, cfg.d_model, dtype),
+               "final_norm": rmsnorm_init(cfg.d_model, dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks.pop(), cfg.d_model, cfg.vocab_size, dtype)
+
+    p["prefix"] = tuple(
+        blocks.block_init(ks.pop(), cfg, cfg.pattern[i], blocks.ffn_kind(cfg, i),
+                          dtype=dtype)
+        for i in plan.prefix)
+    p["suffix"] = tuple(
+        blocks.block_init(ks.pop(), cfg, cfg.pattern[i], blocks.ffn_kind(cfg, i),
+                          dtype=dtype)
+        for i in plan.suffix)
+
+    if plan.n_cycles:
+        def one_cycle(ck):
+            cks = jax.random.split(ck, len(plan.pattern))
+            return tuple(
+                _cycle_block_init(cks[j], cfg, plan.pattern[j],
+                                  plan.cycle_start + j, dtype)
+                for j in range(len(plan.pattern)))
+        cycle_keys = jax.random.split(ks.pop(), plan.n_cycles)
+        p["cycles"] = jax.vmap(one_cycle)(cycle_keys)
+    else:
+        p["cycles"] = ()
+
+    if cfg.mtp_depth:
+        km = ks.pop()
+        k1, k2, k3 = jax.random.split(km, 3)
+        p["mtp"] = {
+            "proj": dense_init(k1, 2 * cfg.d_model, cfg.d_model, dtype),
+            "norm_h": rmsnorm_init(cfg.d_model, dtype),
+            "norm_e": rmsnorm_init(cfg.d_model, dtype),
+            "block": blocks.block_init(
+                k2, cfg, "attn",
+                "dense" if cfg.d_ff else "none", dtype=dtype),
+        }
+    return p
+
+
+# ------------------------------------------------------------------- forward
+
+def _ffn_kinds_for_cycle(cfg, plan):
+    return tuple(blocks.ffn_kind(cfg, plan.cycle_start + j)
+                 for j in range(len(plan.pattern)))
+
+
+def _apply_cycle(cycle_params, cfg, plan, h, caches=None, cache_len=None,
+                 positions=None, skip_first: int = 0):
+    """Apply one pattern cycle; caches is a tuple aligned with pattern."""
+    kinds = plan.pattern
+    ffns = _ffn_kinds_for_cycle(cfg, plan)
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for j in range(skip_first, len(kinds)):
+        c = None if caches is None else caches[j]
+        h, nc, a = blocks.block_apply(cycle_params[j], cfg, kinds[j], ffns[j], h,
+                                      cache=c, cache_len=cache_len,
+                                      positions=positions)
+        new_caches.append(nc)
+        aux = aux + a
+    return h, tuple(new_caches), aux
+
+
+def run_stack(params, cfg: ModelConfig, h, *, caches=None, cache_len=None,
+              positions=None, skip_block0: bool = False):
+    """Run all blocks.  Returns (h, new_caches, aux).
+
+    ``skip_block0=True`` starts execution *after* the first block — the
+    Traversal-Learning tail (orchestrator recompute) entry point.
+    """
+    plan = stack_plan(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_prefix, new_cycle_caches, new_suffix = [], None, []
+    first_in_cycle0 = 0
+
+    # ---- prefix
+    prefix = params["prefix"]
+    start = 1 if (skip_block0 and prefix) else 0
+    if skip_block0 and not prefix:
+        first_in_cycle0 = 1
+    for i, bp in enumerate(prefix):
+        if i < start:
+            new_prefix.append(None if caches is None else caches["prefix"][i])
+            continue
+        li = plan.prefix[i]
+        c = None if caches is None else caches["prefix"][i]
+        h, nc, a = blocks.block_apply(bp, cfg, cfg.pattern[li],
+                                      blocks.ffn_kind(cfg, li), h, cache=c,
+                                      cache_len=cache_len, positions=positions)
+        new_prefix.append(nc)
+        aux = aux + a
+
+    # ---- scanned cycles
+    if plan.n_cycles:
+        cyc = params["cycles"]
+        cyc_caches = None if caches is None else caches["cycles"]
+        if first_in_cycle0:
+            # cycle 0 runs partially (block 0 skipped), outside the scan
+            c0 = jax.tree.map(lambda x: x[0], cyc)
+            cc0 = None if cyc_caches is None else jax.tree.map(
+                lambda x: x[0], cyc_caches)
+            h, nc0, a = _apply_cycle(c0, cfg, plan, h, cc0, cache_len,
+                                     positions, skip_first=1)
+            aux = aux + a
+            rest = jax.tree.map(lambda x: x[1:], cyc)
+            rest_caches = None if cyc_caches is None else jax.tree.map(
+                lambda x: x[1:], cyc_caches)
+            n_scan = plan.n_cycles - 1
+        else:
+            nc0 = None
+            rest, rest_caches, n_scan = cyc, cyc_caches, plan.n_cycles
+
+        if n_scan:
+            def scan_body(carry, xs):
+                hh, ax = carry
+                cp, cc = xs
+                hh, ncs, a = _apply_cycle(cp, cfg, plan, hh, cc, cache_len,
+                                          positions)
+                return (hh, ax + a), ncs
+
+            if rest_caches is None:
+                def scan_body_nocache(carry, cp):
+                    hh, ax = carry
+                    hh, _, a = _apply_cycle(cp, cfg, plan, hh, None, cache_len,
+                                            positions)
+                    return (hh, ax + a), None
+
+                (h, aux), _ = jax.lax.scan(scan_body_nocache, (h, aux), rest)
+                scanned_caches = None
+            else:
+                (h, aux), scanned_caches = jax.lax.scan(
+                    scan_body, (h, aux), (rest, rest_caches))
+        else:
+            scanned_caches = rest_caches
+
+        if caches is not None:
+            if first_in_cycle0:
+                # stitch partial cycle-0 cache back on top of scanned caches
+                def stitch(c0_leaf, rest_leaf):
+                    return jnp.concatenate([c0_leaf[None], rest_leaf], axis=0)
+                # nc0 omits the skipped block; reuse its old cache slice
+                old0 = jax.tree.map(lambda x: x[0], cyc_caches)
+                full0 = (old0[0],) + nc0
+                new_cycle_caches = jax.tree.map(stitch, full0, scanned_caches) \
+                    if scanned_caches is not None else jax.tree.map(
+                        lambda x: x[None], full0)
+            else:
+                new_cycle_caches = scanned_caches
+
+    # ---- suffix
+    for i, bp in enumerate(params["suffix"]):
+        li = plan.suffix[i]
+        c = None if caches is None else caches["suffix"][i]
+        h, nc, a = blocks.block_apply(bp, cfg, cfg.pattern[li],
+                                      blocks.ffn_kind(cfg, li), h, cache=c,
+                                      cache_len=cache_len, positions=positions)
+        new_suffix.append(nc)
+        aux = aux + a
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"prefix": tuple(new_prefix), "cycles": new_cycle_caches,
+                      "suffix": tuple(new_suffix)}
+    return h, new_caches, aux
+
+
+# ------------------------------------------------------------ public surface
+
+def embed_tokens(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    """tokens: (B, S) int32.  extra_embeds: (B, F, d) frontend stub output,
+    prepended to the sequence (VLM patches / audio frames)."""
+    h = params["embed"][tokens] * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)
+                                           ).astype(params["embed"].dtype)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+def block0(params, cfg: ModelConfig, h):
+    """First block — produces the TL first-layer activations X^(1)."""
+    plan = stack_plan(cfg)
+    if params["prefix"]:
+        bp, li = params["prefix"][0], 0
+    else:
+        bp, li = jax.tree.map(lambda x: x[0], params["cycles"])[0], plan.cycle_start
+    h, _, aux = blocks.block_apply(bp, cfg, cfg.pattern[li],
+                                   blocks.ffn_kind(cfg, li), h)
+    return h, aux
+
+
+def tail(params, cfg: ModelConfig, h1, return_hidden: bool = False):
+    """Blocks 1..L-1 + final norm + head: what TL's orchestrator recomputes."""
+    h, _, aux = run_stack(params, cfg, h1, skip_block0=True)
+    if return_hidden:
+        return _logits(params, cfg, h), h, aux
+    return _logits(params, cfg, h), aux
+
+
+def _logits(params, cfg: ModelConfig, h):
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", h, head)
+
+
+def forward(params, cfg: ModelConfig, tokens, extra_embeds=None, positions=None):
+    """Full forward.  Returns (logits, aux_loss)."""
+    h = embed_tokens(params, cfg, tokens, extra_embeds)
+    h, _, aux = run_stack(params, cfg, h, positions=positions)
+    return _logits(params, cfg, h), aux
+
+
+def mtp_logits(params, cfg: ModelConfig, tokens, h_final):
+    """DeepSeek-V3 multi-token-prediction head (depth 1): predict t+2 from the
+    final hidden state at t combined with the embedding of token t+1."""
+    m = params["mtp"]
+    emb_next = params["embed"][tokens] * jnp.sqrt(
+        jnp.asarray(cfg.d_model, jnp.float32)).astype(params["embed"].dtype)
+    # shift: position t sees embedding of token t+1
+    emb_next = jnp.roll(emb_next, -1, axis=1)
+    z = jnp.concatenate([rmsnorm(m["norm_h"], h_final, cfg.norm_eps),
+                         rmsnorm(m["norm_e"], emb_next, cfg.norm_eps)], axis=-1)
+    z = jnp.einsum("bse,ed->bsd", z, m["proj"])
+    z, _, _ = blocks.block_apply(m["block"], cfg, "attn",
+                                 "dense" if cfg.d_ff else "none", z)
+    return _logits(params, cfg, z)
+
+
+def forward_with_hidden(params, cfg: ModelConfig, tokens, extra_embeds=None,
+                        positions=None):
+    h = embed_tokens(params, cfg, tokens, extra_embeds)
+    h, _, aux = run_stack(params, cfg, h, positions=positions)
+    return _logits(params, cfg, h), h, aux
+
+
+# --------------------------------------------------------------------- cache
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    plan = stack_plan(cfg)
+    pref = tuple(blocks.block_cache_init(cfg, cfg.pattern[i], batch, max_len, dtype)
+                 for i in plan.prefix)
+    suff = tuple(blocks.block_cache_init(cfg, cfg.pattern[i], batch, max_len, dtype)
+                 for i in plan.suffix)
+    if plan.n_cycles:
+        one = tuple(blocks.block_cache_init(cfg, k, batch, max_len, dtype)
+                    for k in plan.pattern)
+        cyc = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (plan.n_cycles,) + x.shape), one)
+    else:
+        cyc = None
+    return {"prefix": pref, "cycles": cyc, "suffix": suff}
+
+
+def prefill(params, cfg: ModelConfig, caches, tokens, extra_embeds=None):
+    """Production prefill: fill the KV caches for the whole prompt and return
+    only the last position's logits (never materializes (B, S, V))."""
+    h = embed_tokens(params, cfg, tokens, extra_embeds)
+    h, new_caches, _ = run_stack(params, cfg, h, caches=caches,
+                                 cache_len=jnp.asarray(0, jnp.int32))
+    return _logits(params, cfg, h[:, -1:])[:, 0], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, caches, token, cache_len,
+                positions=None):
+    """One decode step.  token: (B,) int32; cache_len: scalar int32 (tokens
+    already in cache).  Returns (logits (B, V), new_caches)."""
+    h = embed_tokens(params, cfg, token[:, None])
+    h, new_caches, _ = run_stack(params, cfg, h, caches=caches,
+                                 cache_len=cache_len, positions=positions)
+    return _logits(params, cfg, h)[:, 0], new_caches

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (step -> lr)."""
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr, total_steps, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr, warmup_steps, total_steps, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,103 @@
+"""Analysis layer: HLO parser trip counts, roofline math, report rendering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_flops import Costs, analyze, parse_module
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                                     model_flops)
+from repro.analysis.report import fmt_bytes, roofline_table
+from repro.configs import get_config, get_shape
+
+HLO = """
+HloModule test, is_scheduled=true
+
+%body (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i2, %ar)
+}
+
+%cond (arg.1: (s32[], f32[8,16])) -> pred[] {
+  %arg.1 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i.1 = s32[] get-tuple-element(%arg.1), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i.1, %n), direction=LT
+}
+
+ENTRY %main (p: f32[8,16]) -> f32[8,16] {
+  %p = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[8,16]{1,0}) tuple(%z, %p)
+  %w2 = (s32[], f32[8,16]{1,0}) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_flops_and_collectives():
+    c = analyze(HLO)
+    # dot: 2*8*16*16 flops per trip, 7 trips
+    assert c.flops == pytest.approx(7 * 2 * 8 * 16 * 16)
+    # all-reduce: 8*16*4 bytes * 2 (convention) * 7 trips
+    assert c.coll["all-reduce"] == pytest.approx(7 * 8 * 16 * 4 * 2)
+
+
+def test_analyzer_matches_real_scan_workload():
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        return jax.lax.scan(body, x, ws)[0].sum()
+    L, B, D = 5, 32, 64
+    comp = jax.jit(jax.grad(f, argnums=1)).lower(
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32)).compile()
+    c = analyze(comp.as_text())
+    expected = 3 * L * 2 * B * D * D
+    assert 0.8 < c.flops / expected < 1.4
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="a", shape="s", mesh="single", chips=256,
+                 flops_per_chip=PEAK_FLOPS, bytes_per_chip=HBM_BW * 10,
+                 coll_bytes_per_chip=ICI_BW, model_flops_global=PEAK_FLOPS * 128)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(10.0)
+    assert r.t_collective == pytest.approx(1.0)
+    assert r.bottleneck == "memory"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_semantics():
+    cfg = get_config("deepseek-v3-671b")
+    tr = model_flops(cfg, get_shape("train_4k"))
+    pf = model_flops(cfg, get_shape("prefill_32k"))
+    dc = model_flops(cfg, get_shape("decode_32k"))
+    n_act = cfg.n_active_params()
+    assert tr == pytest.approx(6 * n_act * 4096 * 256)
+    assert pf == pytest.approx(2 * n_act * 32768 * 32)
+    assert dc == pytest.approx(2 * n_act * 128)
+
+
+def test_report_renders_skips_and_rows():
+    arts = {
+        ("a1", "train_4k", "single"): {
+            "arch": "a1", "shape": "train_4k", "mesh": "single",
+            "status": "ok", "t_compute": 1.0, "t_memory": 2.0,
+            "t_collective": 0.5, "bottleneck": "memory",
+            "useful_flops_ratio": 0.7, "peak_memory_per_chip": 2**30,
+            "coll_breakdown": {"all-reduce": 2**20}},
+        ("a1", "long_500k", "single"): {
+            "arch": "a1", "shape": "long_500k", "mesh": "single",
+            "status": "skipped"},
+    }
+    tbl = roofline_table(arts, "single")
+    assert "**memory**" in tbl and "designed skip" in tbl
+    assert fmt_bytes(2**30) == "1.0G" and fmt_bytes(2**20) == "1M"

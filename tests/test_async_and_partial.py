@@ -1,0 +1,122 @@
+"""Paper §3.4 (async buffered TL) and §5.1 (partial parameter transfer)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import DATRET
+from repro.core.async_tl import (GradientBuffer, BufferedContribution,
+                                 LatencyTracker, async_train_epoch)
+from repro.core.baselines import ShardData, evaluate, train_cl
+from repro.core.node import TLNode
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.partial_update import PartialUpdateCodec
+from repro.core.transport import Transport
+from repro.data.datasets import shard_iid, tabular
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = tabular(400, 32, 4, seed=0, margin=2.0, noise=0.8)
+    train, test = ds.split(0.8, seed=0)
+    shards = shard_iid(train, 4, seed=0)
+    model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
+    return model, shards, test
+
+
+def test_gradient_buffer_drops_stale():
+    buf = GradientBuffer(min_contributions=2, max_staleness=1)
+    g = {"w": jnp.ones(3)}
+    buf.add(BufferedContribution(0, model_version=0, grads=g, loss_sum=1.0,
+                                 n_samples=4), current_version=0)
+    buf.add(BufferedContribution(1, model_version=0, grads=g, loss_sum=1.0,
+                                 n_samples=4), current_version=5)   # stale
+    assert buf.n_dropped_stale == 1
+    assert not buf.ready()
+
+
+def test_latency_tracker_orders_fast_first():
+    t = LatencyTracker()
+    t.observe(0, 1.0)
+    t.observe(1, 0.1)
+    t.observe(2, 0.5)
+    assert t.priority_order([0, 1, 2]) == [1, 2, 0]
+
+
+def test_async_epoch_trains(setup):
+    model, shards, test = setup
+    nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                          batch_size=32, seed=0, check_consistency=False)
+    orch.initialize(jax.random.PRNGKey(0))
+    lat = {0: 0.01, 1: 0.5, 2: 0.02, 3: 0.05}
+    for _ in range(3):
+        stats, tracker = async_train_epoch(
+            orch, min_contributions=2, max_staleness=2,
+            node_latency_fn=lambda n: lat[n])
+    acc = evaluate(model, orch.params, test.x, test.y)["acc"]
+    assert acc > 0.6
+    # the tracker learned node 1 is slowest
+    assert tracker.priority_order([0, 1, 2, 3])[-1] == 1
+
+
+def test_async_with_full_contributions_matches_sync_quality(setup):
+    """min_contributions == all nodes per batch ≈ strict TL."""
+    model, shards, test = setup
+    key = jax.random.PRNGKey(1)
+    nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                          batch_size=32, seed=0, check_consistency=False)
+    orch.initialize(key)
+    for _ in range(3):
+        async_train_epoch(orch)
+    acc_async = evaluate(model, orch.params, test.x, test.y)["acc"]
+    sdata = [ShardData(s.x, s.y) for s in
+             [ShardData(jnp.asarray(sh.x), jnp.asarray(sh.y)) for sh in shards]]
+    p_cl = train_cl(model, sdata, sgd(0.05), key=key, epochs=3, batch_size=32)
+    acc_cl = evaluate(model, p_cl, test.x, test.y)["acc"]
+    assert abs(acc_async - acc_cl) < 0.15
+
+
+# ------------------------------------------------------------- §5.1 partial
+
+def test_partial_update_roundtrip_threshold():
+    key = jax.random.PRNGKey(0)
+    old = {"a": jax.random.normal(key, (32, 16)), "b": jnp.zeros((8,))}
+    new = jax.tree.map(lambda x: x + 0.5, old)
+    codec = PartialUpdateCodec(threshold=0.0)
+    payload = codec.encode(old, new)
+    patched = PartialUpdateCodec.apply(old, payload)
+    for a, b in zip(jax.tree.leaves(patched), jax.tree.leaves(new)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_partial_update_residual_bounds_drift():
+    """Un-shipped deltas accumulate and ship later; drift <= threshold."""
+    key = jax.random.PRNGKey(1)
+    p0 = {"w": jax.random.normal(key, (64,))}
+    codec = PartialUpdateCodec(threshold=0.05)
+    cached = p0
+    true = p0
+    for step in range(5):
+        delta = 0.02 * jax.random.normal(jax.random.fold_in(key, step), (64,))
+        new = {"w": true["w"] + delta}
+        payload = codec.encode(true, new)
+        cached = PartialUpdateCodec.apply(cached, payload)
+        true = new
+    drift = float(jnp.abs(cached["w"] - true["w"]).max())
+    assert drift <= 0.05 + 1e-6
+    assert codec.compression_ratio > 1.0
+
+
+def test_partial_update_topk_compresses():
+    key = jax.random.PRNGKey(2)
+    old = {"w": jnp.zeros((1000,))}
+    new = {"w": jax.random.normal(key, (1000,))}
+    codec = PartialUpdateCodec(top_frac=0.1)
+    codec.encode(old, new)
+    assert codec.compression_ratio > 2.0

@@ -1,0 +1,98 @@
+"""Baseline DL methods: they train, and the paper's quality ordering holds
+on a non-IID task (TL == CL > FedAvg with local epochs).
+"""
+import jax
+import numpy as np
+import pytest
+
+import dataclasses
+
+from repro.configs.paper_models import DATRET
+from repro.core import baselines as B
+from repro.core.node import TLNode
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.transport import Transport
+from repro.data.datasets import shard_noniid, tabular
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+
+@pytest.fixture(scope="module")
+def task():
+    ds = tabular(n=600, d=32, n_classes=4, seed=0, margin=2.0, noise=0.8)
+    train, test = ds.split(0.8, seed=1)
+    shards = shard_noniid(train, n_nodes=4, alpha=0.25, seed=2)
+    sdata = [B.ShardData(jax.numpy.asarray(s.x), jax.numpy.asarray(s.y))
+             for s in shards]
+    return sdata, test
+
+
+def test_cl_trains(task):
+    sdata, test = task
+    model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
+    p = B.train_cl(model, sdata, sgd(0.05), key=jax.random.PRNGKey(0),
+                   epochs=3, batch_size=32)
+    m = B.evaluate(model, p, test.x, test.y)
+    assert m["acc"] > 0.5
+
+
+def test_fl_trains_but_below_cl(task):
+    sdata, test = task
+    model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
+    key = jax.random.PRNGKey(0)
+    p_cl = B.train_cl(model, sdata, sgd(0.05), key=key, epochs=3,
+                      batch_size=32)
+    tr = Transport()
+    p_fl = B.train_fl(model, sdata, sgd(0.05), key=key, rounds=3,
+                      local_epochs=1, batch_size=32, transport=tr)
+    acc_cl = B.evaluate(model, p_cl, test.x, test.y)["acc"]
+    acc_fl = B.evaluate(model, p_fl, test.x, test.y)["acc"]
+    assert acc_fl > 0.3                       # it does learn
+    assert acc_fl <= acc_cl + 0.05            # but does not beat CL
+    assert tr.bytes_sent["model"] > 0         # model moved each round
+
+
+def test_sl_and_sfl_train(task):
+    sdata, test = task
+    model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
+    key = jax.random.PRNGKey(0)
+    p_sl = B.train_sl(model, sdata, sgd(0.05), key=key, rounds=2,
+                      batch_size=32)
+    p_slp = B.train_sl(model, sdata, sgd(0.05), key=key, rounds=2,
+                       batch_size=32, no_label_sharing=True)
+    p_sfl = B.train_sfl(model, sdata, sgd(0.05), key=key, rounds=2,
+                        batch_size=32)
+    for p in (p_sl, p_slp, p_sfl):
+        assert B.evaluate(model, p, test.x, test.y)["acc"] > 0.3
+
+
+def test_tl_matches_cl_on_noniid(task):
+    """The paper's headline: TL == CL quality on non-IID shards."""
+    sdata, test = task
+    model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
+    key = jax.random.PRNGKey(0)
+    nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(sdata)]
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                          batch_size=32, seed=0, check_consistency=False)
+    orch.initialize(key)
+    for _ in range(3):
+        orch.train_epoch()
+    acc_tl = B.evaluate(model, orch.params, test.x, test.y)["acc"]
+    p_cl = B.train_cl(model, sdata, sgd(0.05), key=key, epochs=3,
+                      batch_size=32)
+    acc_cl = B.evaluate(model, p_cl, test.x, test.y)["acc"]
+    # same-quality claim: TL within noise of CL (they see the same data but
+    # different shuffles)
+    assert abs(acc_tl - acc_cl) < 0.1, (acc_tl, acc_cl)
+
+
+def test_metrics_auc_and_f1():
+    y = np.array([0, 0, 1, 1])
+    import jax.numpy as jnp
+
+    class Dummy:
+        def forward(self, p, x):
+            return jnp.asarray([[2.0, 0.0], [1.5, 0.2], [0.0, 2.0],
+                                [0.1, 1.0]])
+    m = B.evaluate(Dummy(), None, np.zeros((4, 1)), y)
+    assert m["acc"] == 1.0 and m["auc"] == 1.0 and m["macro_f1"] == 1.0

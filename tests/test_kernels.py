@@ -1,0 +1,125 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Shapes/dtypes swept parametrically + hypothesis property tests on the
+quantizer's error bound.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.act_compress import (compress, decompress,
+                                        dequantize_rows_ref,
+                                        quantize_rows_ref)
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.rglru import rglru_ref, rglru_scan
+from repro.kernels.ssd import ssd, ssd_ref_bh
+
+
+# ------------------------------------------------------------ flash attention
+
+@pytest.mark.parametrize("B,S,H,KV,D,win,dtype", [
+    (1, 128, 2, 2, 64, 0, jnp.float32),
+    (2, 256, 4, 2, 64, 0, jnp.float32),
+    (1, 192, 2, 1, 128, 0, jnp.float32),       # padding path (192 % 64 != 0)
+    (1, 256, 2, 1, 128, 64, jnp.float32),      # sliding window
+    (1, 128, 2, 2, 64, 0, jnp.bfloat16),
+])
+def test_flash_vs_ref(B, S, H, KV, D, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    out = flash_attention(q, k, v, causal=True, window=win,
+                          block_q=64, block_k=64)
+    rep = H // KV
+    kr = jnp.repeat(k, rep, 2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, 2) if rep > 1 else v
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, D).astype(jnp.float32),
+        kr.transpose(0, 2, 1, 3).reshape(B * H, S, D).astype(jnp.float32),
+        vr.transpose(0, 2, 1, 3).reshape(B * H, S, D).astype(jnp.float32),
+        scale=1 / math.sqrt(D), causal=True, window=win)
+    ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+# ----------------------------------------------------------------------- SSD
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 2, 16, 8, 8),
+    (2, 64, 3, 32, 16, 16),
+    (1, 128, 1, 64, 32, 32),
+])
+def test_ssd_vs_sequential_ref(B, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A_log = jax.random.normal(ks[2], (H,)) * 0.5
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y, hT = ssd(x, dt, A_log, Bm, Cm, chunk=chunk)
+
+    A = -jnp.exp(A_log)
+    dA = (dt * A).transpose(0, 2, 1).reshape(B * H, S)
+    xf = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    Bf = jnp.broadcast_to(Bm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Cf = jnp.broadcast_to(Cm[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    yr, hTr = ssd_ref_bh(dA, xf, Bf, Cf)
+    yr = yr.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(hT.reshape(B * H, P, N)),
+                               np.asarray(hTr), atol=2e-4, rtol=2e-4)
+
+
+# --------------------------------------------------------------------- RG-LRU
+
+@pytest.mark.parametrize("B,S,W,chunk", [(1, 32, 64, 8), (2, 48, 128, 16),
+                                         (1, 40, 64, 16)])
+def test_rglru_vs_ref(B, S, W, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W)))
+    b = jax.random.normal(ks[1], (B, S, W))
+    h, hT = rglru_scan(a, b, chunk=chunk)
+    hr = rglru_ref(a, b)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hr[:, -1]),
+                               atol=1e-5)
+
+
+# -------------------------------------------------------------- act compress
+
+def test_quantizer_matches_ref_bitexact():
+    x = jax.random.normal(jax.random.PRNGKey(3), (96, 192)) * 5
+    payload = compress(x, block_rows=32)
+    qr, sr = quantize_rows_ref(x)
+    # scales match to 1 ulp (interpret-mode reduction order may differ);
+    # quantized values may then differ by at most 1 level on ties
+    np.testing.assert_allclose(np.asarray(payload["scale"]), np.asarray(sr),
+                               rtol=1e-6)
+    assert int(jnp.abs(payload["q"].astype(jnp.int32)
+                       - qr.astype(jnp.int32)).max()) <= 1
+    xr = decompress(payload, x.shape, block_rows=32)
+    ref = dequantize_rows_ref(qr, sr)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(ref), atol=1e-6)
+
+
+@given(rows=st.integers(1, 40), cols=st.integers(2, 64),
+       scale=st.floats(1e-3, 1e3))
+@settings(max_examples=25, deadline=None)
+def test_quantizer_error_bound(rows, cols, scale):
+    """Property: |x - dequant(quant(x))| <= absmax/127 per row (half-ulp of
+    the int8 grid) — the §5.2 compression is lossy but bounded."""
+    x = np.random.default_rng(rows * 100 + cols).normal(
+        size=(rows, cols)).astype(np.float32) * scale
+    q, s = quantize_rows_ref(jnp.asarray(x))
+    xr = dequantize_rows_ref(q, s)
+    bound = np.abs(x).max(axis=1) / 127.0 * 0.5 + 1e-7
+    err = np.abs(np.asarray(xr) - x).max(axis=1)
+    assert np.all(err <= bound * 1.01)

@@ -1,0 +1,130 @@
+"""THE paper claim: TL's distributed update == the centralized (CL) update.
+
+Validated at two levels:
+  1. protocol level — orchestrator/node message passing produces exactly the
+     CL gradient on each virtual batch (all three small-model families);
+  2. production level — the pjit TL loss (remat-from-X^(1)) equals model.loss
+     value and gradient for every assigned architecture family.
+Also checks eq. 12 consistency (orchestrator-recomputed ∂L/∂X^(1) equals the
+aggregated node-submitted first-layer gradients).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.paper_models import CONVNET, DATRET, TINY_TRANSFORMER
+from repro.core.node import TLNode, ce_sum
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.transport import Transport
+from repro.core.tl_step import tl_loss_fn
+from repro.models import build_model
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+
+def _make_nodes(model, cfg, sizes, rng):
+    nodes = []
+    for i, n in enumerate(sizes):
+        if cfg.family == "transformer":
+            x = rng.integers(0, cfg.vocab_size, (n, cfg.seq_len))
+        else:
+            x = rng.normal(size=(n,) + cfg.in_shape).astype(np.float32)
+        y = rng.integers(0, cfg.n_classes, n)
+        nodes.append(TLNode(i, model, x, y))
+    return nodes
+
+
+@pytest.mark.parametrize("cfg", [DATRET, CONVNET, TINY_TRANSFORMER],
+                         ids=lambda c: c.name)
+def test_protocol_matches_cl_gradient(cfg, rng):
+    model = SmallModel(cfg)
+    sizes = [13, 8, 11, 9]
+    nodes = _make_nodes(model, cfg, sizes, rng)
+    tr = Transport()
+    orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=16, seed=0)
+    orch.initialize(jax.random.PRNGKey(0))
+    p0 = orch.params
+
+    plan = orch.build_plan(0)
+    vb = plan.batches[0]
+
+    # centralized reference on the same virtual batch
+    xs = np.concatenate([np.asarray(n.x) for n in nodes])
+    ys = np.concatenate([np.asarray(n.y) for n in nodes])
+    offs = np.cumsum([0] + sizes[:-1])
+    rows = offs[plan.global_to_node[vb.global_ids]] \
+        + plan.global_to_local[vb.global_ids]
+    xb, yb = jnp.asarray(xs[rows]), jnp.asarray(ys[rows])
+    cl_grads = jax.grad(
+        lambda p: ce_sum(model.forward(p, xb), yb) / vb.size)(p0)
+
+    for n in nodes:
+        n.receive_model(p0)
+    orch.cache_model_per_epoch = True
+    stats = orch.train_batch(vb, {n.node_id: n for n in nodes})
+
+    tl_grads = jax.tree.map(lambda a, b: (a - b) / 0.05, p0, orch.params)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), cl_grads, tl_grads)))
+    assert err < 2e-5, f"TL gradient deviates from CL by {err}"
+    assert stats.grad_consistency < 1e-5          # eq. 12
+
+
+def test_protocol_training_matches_cl_trajectory(rng):
+    """Several full TL epochs track a CL run on identical virtual batches."""
+    cfg = DATRET
+    model = SmallModel(cfg)
+    sizes = [16, 16, 16, 16]
+    nodes = _make_nodes(model, cfg, sizes, rng)
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                          batch_size=16, seed=0)
+    orch.initialize(jax.random.PRNGKey(1))
+    p_cl = orch.params
+    st_cl = sgd(0.05).init(p_cl)
+
+    xs = np.concatenate([np.asarray(n.x) for n in nodes])
+    ys = np.concatenate([np.asarray(n.y) for n in nodes])
+    offs = np.cumsum([0] + sizes[:-1])
+
+    opt = sgd(0.05)
+    for epoch in range(2):
+        plan = orch.build_plan(epoch)
+        for vb in plan.batches:
+            rows = offs[plan.global_to_node[vb.global_ids]] \
+                + plan.global_to_local[vb.global_ids]
+            xb, yb = jnp.asarray(xs[rows]), jnp.asarray(ys[rows])
+            g = jax.grad(lambda p: ce_sum(model.forward(p, xb), yb)
+                         / vb.size)(p_cl)
+            p_cl, st_cl = opt.update(p_cl, g, st_cl)
+        orch.train_epoch()
+
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), p_cl, orch.params)))
+    assert err < 5e-4, f"TL trajectory diverged from CL by {err}"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "qwen2.5-32b",
+                                  "recurrentgemma-9b", "mamba2-780m",
+                                  "starcoder2-3b"])
+def test_production_tl_loss_equals_model_loss(arch):
+    cfg = get_config(arch, reduced=True)
+    m = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    p = m.init(key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+    if cfg.frontend:
+        batch["embeds"] = jax.random.normal(
+            key, (2, cfg.frontend_tokens, cfg.d_model)) * 0.02
+
+    l_tl = tl_loss_fn(m, cfg, "tl")(p, batch)
+    l_cl = m.loss(p, batch)[0]
+    assert abs(float(l_tl - l_cl)) < 1e-4
+
+    g_tl = jax.grad(tl_loss_fn(m, cfg, "tl"))(p, batch)
+    g_cl = jax.grad(lambda pp: m.loss(pp, batch)[0])(p)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), g_tl, g_cl)))
+    assert err < 1e-4, f"remat-TL gradient deviates by {err}"

@@ -1,0 +1,71 @@
+"""Algorithm 1 properties: coverage, permutation, traversal-plan coherence.
+
+Property-based via hypothesis: for any node population, every virtual batch
+must (a) reference only valid (node, local) pairs, (b) cover each global id
+at most once per epoch, (c) order traversal segments by first appearance,
+(d) partition the batch's positions exactly.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.virtual_batch import (IndexRange, create_virtual_batches,
+                                      global_reindex, make_traversal)
+
+
+@given(sizes=st.lists(st.integers(1, 40), min_size=1, max_size=8),
+       batch=st.integers(1, 32), seed=st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_plan_properties(sizes, batch, seed):
+    ranges = [IndexRange(i, n) for i, n in enumerate(sizes)]
+    total = sum(sizes)
+    plan = create_virtual_batches(ranges, min(batch, total), seed=seed)
+    seen = set()
+    for vb in plan.batches:
+        positions = np.concatenate([s.batch_positions for s in vb.traversal])
+        # traversal partitions the batch positions exactly
+        assert sorted(positions.tolist()) == list(range(vb.size))
+        # each node visited at most once per batch
+        node_ids = [s.node_id for s in vb.traversal]
+        assert len(node_ids) == len(set(node_ids))
+        for seg in vb.traversal:
+            n = sizes[seg.node_id]
+            assert np.all(seg.local_indices >= 0)
+            assert np.all(seg.local_indices < n)
+            # the segment's rows really belong to that node
+            gids = vb.global_ids[seg.batch_positions]
+            assert np.all(plan.global_to_node[gids] == seg.node_id)
+            assert np.array_equal(plan.global_to_local[gids],
+                                  seg.local_indices)
+        for g in vb.global_ids:
+            assert g not in seen   # no duplicate sample within an epoch
+            seen.add(int(g))
+    # with drop_remainder, every complete batch is covered
+    n_batches = total // min(batch, total)
+    assert len(plan.batches) == n_batches
+
+
+def test_global_reindex_bijection():
+    ranges = [IndexRange(0, 10), IndexRange(1, 5), IndexRange(2, 7)]
+    node_of, local_of = global_reindex(ranges)
+    pairs = set(zip(node_of.tolist(), local_of.tolist()))
+    assert len(pairs) == 22
+    # randomized ids (§5.3) preserve the bijection
+    node_r, local_r = global_reindex(ranges, randomize_ids=True, seed=3)
+    assert set(zip(node_r.tolist(), local_r.tolist())) == pairs
+
+
+def test_traversal_first_appearance_order():
+    node_of = np.array([0, 0, 1, 1, 2, 2])
+    local_of = np.array([0, 1, 0, 1, 0, 1])
+    gids = np.array([4, 0, 5, 2])      # first appearance: node2, node0, node1
+    segs = make_traversal(gids, node_of, local_of)
+    assert [s.node_id for s in segs] == [2, 0, 1]
+
+
+def test_shuffling_differs_across_epochs():
+    ranges = [IndexRange(0, 64)]
+    p0 = create_virtual_batches(ranges, 16, seed=0)
+    p1 = create_virtual_batches(ranges, 16, seed=1)
+    assert not np.array_equal(p0.batches[0].global_ids,
+                              p1.batches[0].global_ids)
