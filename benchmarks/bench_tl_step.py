@@ -1,0 +1,108 @@
+"""TL step-time benchmark: eager reference vs fused jitted hot path.
+
+Measures steps/sec of the protocol simulator's full TL round (model
+redistribution + node visits + centralized BP + update) at 2/4/8 simulated
+nodes, for
+
+* ``eager`` — the seed's op-by-op path: unjitted node visits, per-node
+  ``.at[].set`` scatters, an un-jitted tail vjp per virtual batch, host
+  syncs inside every visit;
+* ``fused`` — jitted node visits with device-resident stats, one batched
+  scatter reassembly, and a single compiled (donated) vjp+update step.
+
+Writes ``BENCH_tl_step.json`` at the repo root — the seed of the repo's
+step-time perf trajectory; run via ``benchmarks/run.py`` (smoke) or
+directly: ``PYTHONPATH=src python benchmarks/bench_tl_step.py``.
+"""
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_tl_step.json")
+
+TOTAL_SAMPLES = 512
+BATCH_SIZE = 64
+
+
+def _build_orchestrator(n_nodes: int, *, fused: bool):
+    from repro.configs.paper_models import DATRET
+    from repro.core.node import TLNode
+    from repro.core.orchestrator import TLOrchestrator
+    from repro.core.transport import Transport
+    from repro.models.small import SmallModel
+    from repro.optim import sgd
+
+    cfg = DATRET
+    model = SmallModel(cfg)
+    per_node = TOTAL_SAMPLES // n_nodes
+    r = np.random.default_rng(0)
+    nodes = [TLNode(i, model,
+                    r.normal(size=(per_node,) + cfg.in_shape).astype(np.float32),
+                    r.integers(0, cfg.n_classes, per_node),
+                    jit_visits=fused)
+             for i in range(n_nodes)]
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                          batch_size=BATCH_SIZE, seed=0,
+                          fused=fused, donate=fused)
+    orch.initialize(jax.random.PRNGKey(0))
+    return orch
+
+
+def _measure(orch, epochs: int) -> float:
+    """Steps/sec over `epochs` epochs (one warmup epoch first)."""
+    orch.train_epoch()                                     # warmup + compile
+    jax.block_until_ready(orch.params)
+    steps = 0
+    t0 = time.perf_counter()
+    for _ in range(epochs):
+        steps += len(orch.train_epoch())
+    jax.block_until_ready(orch.params)
+    return steps / (time.perf_counter() - t0)
+
+
+def run(node_counts=(2, 4, 8), epochs: int = 3, out_path: str = OUT_PATH) -> dict:
+    results = {}
+    for n in node_counts:
+        eager = _measure(_build_orchestrator(n, fused=False), epochs)
+        fused = _measure(_build_orchestrator(n, fused=True), epochs)
+        results[str(n)] = {
+            "eager_steps_per_s": round(eager, 2),
+            "fused_steps_per_s": round(fused, 2),
+            "speedup": round(fused / eager, 2),
+        }
+        print(f"bench_tl_step/nodes={n},"
+              f"{1e6 / fused:.0f},speedup={fused / eager:.2f}x")
+    art = {
+        "benchmark": "tl_step",
+        "model": "datret-mlp",
+        "batch_size": BATCH_SIZE,
+        "total_samples": TOTAL_SAMPLES,
+        "epochs_measured": epochs,
+        "backend": jax.default_backend(),
+        "nodes": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(art, f, indent=1)
+    print(f"bench_tl_step/artifact,{out_path}")
+    return art
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        # fast per-PR regression signal: 2 nodes, one measured epoch, same
+        # JSON shape — written beside (never over) the full-sweep artifact
+        return run(node_counts=(2,), epochs=1,
+                   out_path=os.path.join(REPO_ROOT,
+                                         "BENCH_tl_step_smoke.json"))
+    return run()
+
+
+if __name__ == "__main__":
+    import sys
+    art = main(smoke="--smoke" in sys.argv)
+    worst = min(v["speedup"] for v in art["nodes"].values())
+    print(f"bench_tl_step/min_speedup,{worst}")

@@ -1,35 +1,68 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV and writes a machine-readable ``BENCH_<name>.json`` per benchmark at
+# the repo root, so per-PR perf regressions are diffable artifacts, not just
+# stdout.
 """Benchmark harness:
 
-  table1_quality  — paper Table 1: quality of CL/TL/FL/SL/SL+/SFL across
-                    four dataset families
   table2_runtime  — paper Table 2: per-round runtime + bytes (analytic
                     eqs. 15-19 + transport-simulated)
   fig3_scaling    — paper Fig. 3: runtime vs node count
   roofline_report — the roofline table from the dry-run artifacts
+  bench_tl_step   — eager vs fused TL step-time (smoke: 2 nodes); the
+                    full sweep is ``python benchmarks/bench_tl_step.py``
+  table1_quality  — paper Table 1: quality of CL/TL/FL/SL/SL+/SFL across
+                    four dataset families
 """
+import json
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write_artifact(name: str, payload: dict) -> str:
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    from benchmarks import fig3_scaling, roofline_report, table1_quality, \
-        table2_runtime
+    from benchmarks import (bench_tl_step, fig3_scaling, roofline_report,
+                            table1_quality, table2_runtime)
     failures = []
-    for name, mod in [("table2_runtime", table2_runtime),
-                      ("fig3_scaling", fig3_scaling),
-                      ("roofline_report", roofline_report),
-                      ("table1_quality", table1_quality)]:
+    entries = [
+        ("table2_runtime", table2_runtime.main, False),
+        ("fig3_scaling", fig3_scaling.main, False),
+        ("roofline_report", roofline_report.main, False),
+        # writes its own BENCH_tl_step_smoke.json — no wrapper artifact on
+        # success, so the file keeps one shape however it's produced
+        ("tl_step_smoke", lambda: bench_tl_step.main(smoke=True), True),
+        ("table1_quality", table1_quality.main, False),
+    ]
+    for name, fn, writes_own in entries:
         t = time.time()
         try:
-            mod.main()
-            print(f"{name}/total,{(time.time()-t)*1e6:.0f},ok")
+            result = fn()
+            dt = time.time() - t
+            if not writes_own:
+                art = {"benchmark": name, "status": "ok",
+                       "seconds": round(dt, 3)}
+                if isinstance(result, dict):
+                    art["result"] = result
+                _write_artifact(name, art)
+            print(f"{name}/total,{dt * 1e6:.0f},ok")
         except Exception as e:  # noqa: BLE001
+            dt = time.time() - t
             failures.append((name, e))
-            print(f"{name}/total,{(time.time()-t)*1e6:.0f},FAILED:{e}")
-    print(f"all/total,{(time.time()-t0)*1e6:.0f},"
+            _write_artifact(name, {"benchmark": name, "status": "error",
+                                   "seconds": round(dt, 3),
+                                   "error": f"{type(e).__name__}: {e}"})
+            print(f"{name}/total,{dt * 1e6:.0f},FAILED:{e}")
+    print(f"all/total,{(time.time() - t0) * 1e6:.0f},"
           f"{'ok' if not failures else failures}")
     if failures:
         raise SystemExit(1)

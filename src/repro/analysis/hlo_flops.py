@@ -127,7 +127,9 @@ def _parse_operands(rest: str) -> List[str]:
             arg += ch
     names = []
     for a in args:
-        m = re.match(r"\s*%([\w.\-]+)", a)
+        # operands may be bare ("%copy.10") or typed
+        # ("f32[32,64]{1,0} %copy.10") depending on the XLA version
+        m = re.search(r"%([\w.\-]+)", a)
         if m:
             names.append(m.group(1))
     return names

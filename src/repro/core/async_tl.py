@@ -134,11 +134,14 @@ def async_train_epoch(orch, *, min_contributions: Optional[int] = None,
                 lambda p, h: orch.model.tail_layers(p, h), orch.params,
                 wire["x1"])
             g_tail, _ = pull(wire["delta_L"])
-            grads = jax.tree.map(jnp.add, g_tail, wire["gw1"])
+            # gw1 may be a pruned {leaf_index: array} dict (jitted nodes) or
+            # a full param pytree (eager reference nodes)
+            from repro.core.node import add_first_layer_grads
+            grads = add_first_layer_grads(g_tail, wire["gw1"])
             buf.add(BufferedContribution(
                 node_id=seg.node_id,
                 model_version=node_version[seg.node_id],
-                grads=grads, loss_sum=fp.loss_sum,
+                grads=grads, loss_sum=float(fp.loss_sum),
                 n_samples=len(seg.local_indices)), version)
             if buf.ready():
                 g, loss, n = buf.drain()

@@ -14,6 +14,15 @@ eqs. 7–11 update layers L..2 from recomputed activations but give no
 privacy-preserving completion is for the node to also send its *first-layer
 weight gradients* (a single layer's worth of parameters), computed during
 the same local BP.  With that, TL's global update is exactly the CL update.
+
+Performance: by default the whole visit (first layer + local BP) runs as a
+single jitted computation per segment shape (``jit_visits=True``), with the
+loss/accuracy statistics kept device-resident — the orchestrator syncs them
+to the host once per epoch, not once per visit.  ``jit_visits=False``
+recovers the original eager op-by-op reference path (used as the benchmark
+baseline).  The shipped first-layer weight gradients are *pruned* to the
+leaves ``first_layer`` actually reads (see :func:`first_layer_grad_leaves`);
+the rest of the tree is structurally zero and is never materialized or sent.
 """
 from __future__ import annotations
 
@@ -30,26 +39,133 @@ def ce_sum(logits, y):
     return -jnp.take_along_axis(logp, y[:, None], axis=-1).sum()
 
 
+def _bucket(k: int, minimum: int = 8) -> int:
+    """Next power of two >= k (>= minimum): visits are padded to bucket
+    sizes so the jitted visit compiles O(log max_segment) times total
+    instead of once per distinct traversal-segment length."""
+    b = minimum
+    while b < k:
+        b *= 2
+    return b
+
+
+def first_layer_grad_leaves(model, params, x_sample) -> tuple:
+    """Indices (in ``params`` flatten order) of the leaves
+    ``model.first_layer`` actually reads.
+
+    Determined structurally by tracing the jaxpr and collecting which input
+    vars feed any equation — every other leaf's first-layer weight gradient
+    is a structural zero the node need not compute, ship, or accumulate.
+    """
+    from jax.extend.core import Var
+
+    flat, treedef = jax.tree_util.tree_flatten(params)
+
+    def fn(leaves, x):
+        return model.first_layer(jax.tree_util.tree_unflatten(treedef, leaves), x)
+
+    closed = jax.make_jaxpr(fn)(flat, x_sample)
+    used = set()
+    for eqn in closed.jaxpr.eqns:
+        for v in eqn.invars:
+            if isinstance(v, Var):
+                used.add(v)
+    for v in closed.jaxpr.outvars:
+        if isinstance(v, Var):
+            used.add(v)
+    return tuple(i for i, v in enumerate(closed.jaxpr.invars[:len(flat)])
+                 if v in used)
+
+
+def add_first_layer_grads(grads, gw1):
+    """Add node-supplied first-layer weight grads into a full gradient tree.
+
+    ``gw1`` is either a pruned ``{leaf_index: array}`` dict (jitted nodes) or
+    a full params-shaped pytree (eager reference nodes).
+    """
+    if isinstance(gw1, dict) and all(isinstance(k, int) for k in gw1):
+        flat, treedef = jax.tree_util.tree_flatten(grads)
+        for i, g in gw1.items():
+            flat[i] = flat[i] + g
+        return jax.tree_util.tree_unflatten(treedef, flat)
+    return jax.tree.map(jnp.add, grads, gw1)
+
+
+# One compiled visit per *model* (not per node): every node holding the same
+# model instance shares the jit cache, so n_nodes × n_buckets compiles
+# collapse to n_buckets.  The cache lives ON the model object (the jitted
+# closure references the model, so any external model-keyed map — weak or
+# not — would pin the model and its executables for the process lifetime).
+_VISIT_CACHE_ATTR = "_tl_visit_cache"
+
+
+def _get_visit_fn(model, params, x_sample):
+    """(keep_leaf_indices, jitted visit) for ``model``, built once.
+
+    The visit runs the whole node phase — first layer, local BP for δ^(L),
+    ∂L/∂X^(1) and the pruned first-layer weight grads — as one compiled
+    function over a *padded* segment: ``mask`` marks the real rows, padded
+    rows carry zero cotangents so they contribute exactly zero to every
+    gradient, and the loss/accuracy sums come back as device scalars.
+    """
+    cached = getattr(model, _VISIT_CACHE_ATTR, None)
+    if cached is not None:
+        return cached
+    keep = first_layer_grad_leaves(model, params, x_sample)
+
+    def visit(params, xb, yb, mask, batch_total):
+        x1 = model.first_layer(params, xb)                         # eq. 1–2
+        logits, pull_tail = jax.vjp(
+            lambda h: model.tail_layers(params, h), x1)
+
+        def masked_loss(lg):
+            logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, yb[:, None], axis=-1)[:, 0]
+            return (nll * mask).sum() / batch_total
+
+        loss = masked_loss(logits)
+        delta_L = jax.grad(masked_loss)(logits)                    # eq. 3
+        (dx1,) = pull_tail(delta_L)
+        _, pull_first = jax.vjp(lambda p: model.first_layer(p, xb), params)
+        (gw1,) = pull_first(dx1)
+        gw1_flat = jax.tree_util.tree_leaves(gw1)
+        acc = ((jnp.argmax(logits, -1) == yb) & (mask > 0)).sum()
+        # only the structurally-nonzero leaves survive; XLA DCEs the rest
+        return (x1, delta_L, dx1, tuple(gw1_flat[i] for i in keep),
+                loss, acc)
+
+    cached = (keep, jax.jit(visit, static_argnums=(4,)))
+    try:
+        setattr(model, _VISIT_CACHE_ATTR, cached)
+    except AttributeError:                     # frozen dataclass facade
+        object.__setattr__(model, _VISIT_CACHE_ATTR, cached)
+    return cached
+
+
 @dataclass
 class FPResult:
     """What a node ships to the orchestrator after its FP visit."""
     x1: Any                 # first-layer activations, (k, ...)
     delta_L: Any            # last-layer gradients dL/dlogits, (k, C)
     dx1: Any                # first-layer gradients dL/dX^(1), (k, ...)
-    gw1: Any                # first-layer weight grads (param pytree, zeros elsewhere)
-    loss_sum: float
-    n_correct: int
+    gw1: Any                # first-layer weight grads: pruned {leaf_idx: arr}
+                            # (jitted) or a full param pytree (eager)
+    loss_sum: Any           # device scalar (jitted) or float (eager)
+    n_correct: Any          # device scalar (jitted) or int (eager)
 
 
 class TLNode:
     """Holds a private shard (x, y); executes FP visits."""
 
-    def __init__(self, node_id: int, model, x, y):
+    def __init__(self, node_id: int, model, x, y, *, jit_visits: bool = True):
         self.node_id = node_id
         self.model = model
         self.x = jnp.asarray(x)
         self.y = jnp.asarray(y)
         self.params = None          # set by orchestrator's model distribution
+        self.jit_visits = jit_visits
+        self._visit_fn = None       # built lazily (needs params for tracing)
+        self._gw1_leaves = None
 
     # ---- protocol surface --------------------------------------------------
     def index_range(self):
@@ -67,18 +183,37 @@ class TLNode:
         assert self.params is not None, "model not distributed to node"
         xb = self.x[local_indices]
         yb = self.y[local_indices]
+        if not self.jit_visits:
+            return self._visit_eager(xb, yb, batch_total)
+        if self._visit_fn is None:
+            self._gw1_leaves, self._visit_fn = _get_visit_fn(
+                self.model, self.params, xb)
+        k = xb.shape[0]
+        b = _bucket(k)
+        if b != k:                 # pad to the bucket; mask marks real rows
+            pad = [(0, b - k)] + [(0, 0)] * (xb.ndim - 1)
+            xb = jnp.pad(xb, pad)
+            yb = jnp.pad(yb, (0, b - k))
+        mask = (jnp.arange(b) < k).astype(jnp.float32)
+        x1, delta_L, dx1, gw1, loss, acc = self._visit_fn(
+            self.params, xb, yb, mask, batch_total)
+        if b != k:                 # ship only the real rows
+            x1, delta_L, dx1 = x1[:k], delta_L[:k], dx1[:k]
+        return FPResult(x1=x1, delta_L=delta_L, dx1=dx1,
+                        gw1=dict(zip(self._gw1_leaves, gw1)),
+                        loss_sum=loss, n_correct=acc)
+
+    def _visit_eager(self, xb, yb, batch_total: int) -> FPResult:
+        """The original op-by-op reference visit (full gw1 tree, host-synced
+        stats); kept as the benchmark baseline and equivalence oracle."""
         m, params = self.model, self.params
-
         x1 = m.first_layer(params, xb)                                 # eq. 1–2
-
-        # local BP: δ^(L), dL/dX^(1), and first-layer weight grads
         logits, pull_tail = jax.vjp(lambda h: m.tail_layers(params, h), x1)
         loss = ce_sum(logits, yb) / batch_total
         delta_L = jax.grad(lambda lg: ce_sum(lg, yb) / batch_total)(logits)  # eq. 3
         (dx1,) = pull_tail(delta_L)
         _, pull_first = jax.vjp(lambda p: m.first_layer(p, xb), params)
         (gw1,) = pull_first(dx1)
-
         acc = int((jnp.argmax(logits, -1) == yb).sum())
         return FPResult(x1=x1, delta_L=delta_L, dx1=dx1, gw1=gw1,
                         loss_sum=float(loss), n_correct=acc)

@@ -11,17 +11,37 @@ redistributes the model.
 The orchestrator also verifies eq. 12: its own recomputed ∂L/∂X^(1) must
 match the aggregate of the node-submitted first-layer gradients — the
 paper's "ensuring consistency with the recalculated forward pass".
+
+Two execution paths produce the *same* update:
+
+* fused (default) — one jitted centralized-BP step per virtual batch:
+  the per-node payloads are concatenated and reassembled with a single
+  batched scatter over the concatenated ``batch_positions``, the tail
+  vjp + eq. 12 consistency check + optimizer update run as one compiled
+  function (cached across virtual batches; ``donate=True`` additionally
+  donates params/opt_state buffers), and loss/accuracy stay device-resident
+  so the host syncs once per epoch;
+* eager (``fused=False``) — the op-by-op reference path with per-node
+  scatters and an un-jitted vjp, kept as the lossless oracle and the
+  benchmark baseline.
+
+Both paths accumulate first-layer weight gradients only over the leaves
+``first_layer`` actually reads (the rest are structural zeros), instead of
+allocating and tree-adding a full zeros param-pytree per node visit.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import functools
+import operator
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.node import TLNode
+from repro.core.node import (TLNode, add_first_layer_grads,
+                             first_layer_grad_leaves)
 from repro.core.transport import Transport
 from repro.core.virtual_batch import VirtualBatchPlan, create_virtual_batches
 
@@ -39,7 +59,8 @@ class TLOrchestrator:
                  batch_size: int = 64, seed: int = 0,
                  compute_time_fn: Callable[[int], float] = lambda n: 0.0,
                  check_consistency: bool = True,
-                 cache_model_per_epoch: bool = False):
+                 cache_model_per_epoch: bool = False,
+                 fused: bool = True, donate: bool = False):
         self.model = model
         self.nodes = list(nodes)
         self.opt = optimizer
@@ -51,9 +72,23 @@ class TLOrchestrator:
         # §5.2 caching: redistribute the model once per epoch instead of once
         # per virtual batch (bandwidth optimization; changes staleness!)
         self.cache_model_per_epoch = cache_model_per_epoch
+        # fused: run the centralized-BP phase as one jitted step (see module
+        # docstring).  donate=True additionally donates the params/opt_state
+        # buffers to the step — callers must not hold references to them.
+        if donate and cache_model_per_epoch:
+            # nodes keep aliases of self.params for the whole epoch under
+            # model caching; donating those buffers after the first virtual
+            # batch would hand deleted arrays to every later visit
+            raise ValueError("donate=True is incompatible with "
+                             "cache_model_per_epoch=True: nodes alias the "
+                             "donated parameter buffers across batches")
+        self.fused = fused
+        self.donate = donate
         self.params = None
         self.opt_state = None
         self._epoch = 0
+        self._fused_step = None
+        self._gw1_leaves = None
 
     # ------------------------------------------------------------- lifecycle
     def initialize(self, key):
@@ -68,7 +103,14 @@ class TLOrchestrator:
 
     # ---------------------------------------------------------- one TL step
     def train_batch(self, vb, node_by_id) -> StepStats:
-        N = vb.size
+        results, order = self._collect_visits(vb, node_by_id)
+        if self.fused:
+            return self._train_batch_fused(vb, results, order)
+        return self._train_batch_eager(vb, results, order)
+
+    def _collect_visits(self, vb, node_by_id):
+        """Distributed FP along the traversal plan (pipelined: transfers of
+        one node overlap the next node's compute — paper §3.2)."""
         results, order = {}, []
 
         if not self.cache_model_per_epoch:
@@ -78,29 +120,113 @@ class TLOrchestrator:
                     node.receive_model(
                         self.transport.send("model", self.params))
 
-        # --- distributed FP along the traversal plan (pipelined: transfers
-        # of one node overlap the next node's compute — paper §3.2)
         with self.transport.parallel():
             for seg in vb.traversal:
                 node = node_by_id[seg.node_id]
                 self.transport.tick(self.compute_time_fn(len(seg.local_indices)))
-                fp = node.forward_visit(seg.local_indices, N)
+                fp = node.forward_visit(seg.local_indices, vb.size)
                 wire = self.transport.send(
                     "activations_grads",
                     {"x1": fp.x1, "delta_L": fp.delta_L, "dx1": fp.dx1,
-                     "gw1": fp.gw1},
+                     "gw1": fp.gw1, "loss_sum": fp.loss_sum,
+                     "n_correct": fp.n_correct},
                     compressible=True)
-                wire["loss_sum"], wire["n_correct"] = fp.loss_sum, fp.n_correct
                 results[seg.node_id] = (seg, wire)
                 order.append(seg.node_id)
+        return results, order
 
+    # ---- first-layer gradient support (structural-zero pruning) -----------
+    def _gw1_leaf_indices(self):
+        if self._gw1_leaves is None:
+            # which param leaves first_layer reads: traced once, reused for
+            # every batch.  A dummy input built from any node's shard works
+            # because the dependency structure is shape-independent.
+            node = self.nodes[0]
+            self._gw1_leaves = first_layer_grad_leaves(
+                self.model, self.params, node.x[:1])
+        return self._gw1_leaves
+
+    @staticmethod
+    def _as_leaf_dict(gw1, leaf_indices):
+        """Normalize a node's gw1 payload to {leaf_index: array}."""
+        if isinstance(gw1, dict) and all(isinstance(k, int) for k in gw1):
+            return gw1
+        flat = jax.tree_util.tree_leaves(gw1)
+        return {i: flat[i] for i in leaf_indices}
+
+    # --------------------------------------------------- fused (jitted) path
+    def _get_fused_step(self):
+        if self._fused_step is None:
+            model, opt = self.model, self.opt
+            check = self.check_consistency
+
+            def step(params, opt_state, x1_cat, dL_cat, dx1_cat, perm, gw1s):
+                # reassemble the virtual batch in global shuffled order with
+                # ONE batched scatter per tensor (positions partition 0..N-1)
+                x1 = jnp.zeros_like(x1_cat).at[perm].set(x1_cat)
+                dL = jnp.zeros_like(dL_cat).at[perm].set(dL_cat)
+                # centralized BP: recompute activations from X^(1) (eq. 4–5),
+                # backprop from aggregated δ^(L) (eq. 6–11)
+                _, pull = jax.vjp(
+                    lambda p, h: model.tail_layers(p, h), params, x1)
+                g_tail, dx1_orch = pull(dL)
+                acc: Dict[int, jax.Array] = {}
+                for g in gw1s:
+                    for i, leaf in g.items():
+                        acc[i] = leaf if i not in acc else acc[i] + leaf
+                grads = add_first_layer_grads(g_tail, acc)
+                if check:                                          # eq. 12
+                    dx1_nodes = jnp.zeros_like(dx1_cat).at[perm].set(dx1_cat)
+                    cons = jnp.max(jnp.abs(dx1_orch - dx1_nodes))
+                else:
+                    cons = jnp.full((), jnp.nan, jnp.float32)
+                # parameter update (eq. 13–14)
+                params, opt_state = opt.update(params, grads, opt_state)
+                return params, opt_state, cons
+
+            donate = (0, 1) if self.donate else ()
+            self._fused_step = jax.jit(step, donate_argnums=donate)
+        return self._fused_step
+
+    def _train_batch_fused(self, vb, results, order) -> StepStats:
+        N = vb.size
+        segs = [results[nid][0] for nid in order]
+        wires = [results[nid][1] for nid in order]
+        leaf_idx = self._gw1_leaf_indices()
+
+        # concatenated payloads are exactly (N, ...): one device transfer of
+        # the int32 permutation, one scatter dispatch per tensor inside jit
+        perm = jnp.asarray(np.concatenate(
+            [seg.batch_positions for seg in segs]).astype(np.int32))
+        x1_cat = jnp.concatenate([w["x1"] for w in wires])
+        dL_cat = jnp.concatenate([w["delta_L"] for w in wires])
+        dx1_cat = jnp.concatenate([w["dx1"] for w in wires])
+        gw1s = tuple(self._as_leaf_dict(w["gw1"], leaf_idx) for w in wires)
+
+        self.params, self.opt_state, cons = self._get_fused_step()(
+            self.params, self.opt_state, x1_cat, dL_cat, dx1_cat, perm, gw1s)
+
+        # loss/accuracy stay device-resident; train_epoch syncs once per epoch
+        loss_sum = functools.reduce(operator.add,
+                                    [w["loss_sum"] for w in wires])
+        n_correct = functools.reduce(operator.add,
+                                     [w["n_correct"] for w in wires])
+        if not self.check_consistency:
+            cons = float("nan")
+        return StepStats(loss=loss_sum, acc=n_correct / N,
+                         grad_consistency=cons)
+
+    # ------------------------------------------------- eager (reference) path
+    def _train_batch_eager(self, vb, results, order) -> StepStats:
+        N = vb.size
         # --- reassemble the virtual batch in global shuffled order
         first_seg, first_fp = results[order[0]]
         x1 = jnp.zeros((N,) + first_fp["x1"].shape[1:], first_fp["x1"].dtype)
         dL = jnp.zeros((N,) + first_fp["delta_L"].shape[1:],
                        first_fp["delta_L"].dtype)
         dx1_nodes = jnp.zeros_like(x1)
-        gw1_total = jax.tree.map(jnp.zeros_like, self.params)
+        leaf_idx = self._gw1_leaf_indices()
+        gw1_total: Dict[int, jax.Array] = {}
         loss_sum, n_correct = 0.0, 0
         for nid in order:
             seg, fp = results[nid]
@@ -108,7 +234,10 @@ class TLOrchestrator:
             x1 = x1.at[pos].set(fp["x1"])
             dL = dL.at[pos].set(fp["delta_L"])
             dx1_nodes = dx1_nodes.at[pos].set(fp["dx1"])
-            gw1_total = jax.tree.map(jnp.add, gw1_total, fp["gw1"])
+            # accumulate only the leaves first_layer populates — not a full
+            # zeros param-pytree per virtual batch
+            for i, g in self._as_leaf_dict(fp["gw1"], leaf_idx).items():
+                gw1_total[i] = g if i not in gw1_total else gw1_total[i] + g
             loss_sum += fp["loss_sum"] if isinstance(fp["loss_sum"], float) \
                 else float(fp["loss_sum"])
             n_correct += fp["n_correct"] if isinstance(fp["n_correct"], int) \
@@ -119,7 +248,7 @@ class TLOrchestrator:
         _, pull = jax.vjp(
             lambda p, h: self.model.tail_layers(p, h), self.params, x1)
         g_tail, dx1_orch = pull(dL)
-        grads = jax.tree.map(jnp.add, g_tail, gw1_total)
+        grads = add_first_layer_grads(g_tail, gw1_total)
 
         consistency = float(jnp.max(jnp.abs(dx1_orch - dx1_nodes))) \
             if self.check_consistency else float("nan")           # eq. 12
@@ -140,6 +269,13 @@ class TLOrchestrator:
                     n.receive_model(self.transport.send("model", self.params))
         stats = [self.train_batch(vb, node_by_id) for vb in plan.batches]
         self._epoch += 1
+        if self.fused and stats:
+            # ONE host sync for the whole epoch's device-resident stats
+            vals = jax.device_get([(s.loss, s.acc, s.grad_consistency)
+                                   for s in stats])
+            stats = [StepStats(loss=float(l), acc=float(a),
+                               grad_consistency=float(c))
+                     for l, a, c in vals]
         return stats
 
     def fit(self, key, epochs: int) -> List[StepStats]:

@@ -31,15 +31,18 @@ class NetworkModel:
         return self.rtt_s + nbytes / self.bandwidth_bytes_per_s
 
 
+def _leaf_bytes(leaf) -> int:
+    """Wire size of one pytree leaf: array leaves by their buffer size,
+    python scalars as 8 bytes, anything else free (metadata)."""
+    if hasattr(leaf, "nbytes"):
+        return int(leaf.nbytes)
+    if isinstance(leaf, (int, float, bool)):
+        return 8
+    return 0
+
+
 def payload_bytes(tree) -> int:
-    leaves = jax.tree.leaves(tree)
-    total = 0
-    for leaf in leaves:
-        if hasattr(leaf, "nbytes"):
-            total += int(leaf.nbytes)
-        elif isinstance(leaf, (int, float, bool)):
-            total += 8
-    return total
+    return sum(_leaf_bytes(leaf) for leaf in jax.tree.leaves(tree))
 
 
 @dataclass
@@ -95,13 +98,16 @@ class Transport:
             out = []
             nbytes = 0
             for leaf in jax.tree.leaves(payload):
-                if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype,
-                                                             jnp.floating):
+                # int8-compress float *tensors* only; scalars and non-float
+                # leaves are charged by their true wire size (not a silent
+                # 8-byte default for anything lacking .nbytes)
+                if hasattr(leaf, "dtype") and jnp.issubdtype(
+                        leaf.dtype, jnp.floating) and leaf.ndim >= 1:
                     c = compress(leaf)
                     nbytes += compressed_bytes(c)
                     out.append(decompress(c, leaf.shape, out_dtype=leaf.dtype))
                 else:
-                    nbytes += int(getattr(leaf, "nbytes", 8))
+                    nbytes += _leaf_bytes(leaf)
                     out.append(leaf)
             self._account(tag, nbytes)
             return jax.tree.unflatten(jax.tree.structure(payload), out)

@@ -1,0 +1,22 @@
+"""Distribution layer: mesh-aware sharding rules + activation constraints.
+
+The GSPMD realization of Traversal Learning partitions the virtual batch
+over the composite (pod, data) mesh axes — one shard per logical TL node —
+and the parameters over ("model", data) Megatron/FSDP-style.  This package
+is the single place those decisions live:
+
+``repro.dist.sharding``
+    Pure spec producers: :func:`param_specs` / :func:`param_pspec` map a
+    parameter pytree to ``PartitionSpec`` s; :func:`tokens_pspec` /
+    :func:`cache_pspec` cover step inputs and KV/state caches;
+    :func:`batch_axes` names the mesh axes the batch shards over.
+
+``repro.dist.constraints``
+    Inside-jit activation sharding hints: :func:`set_activation_mesh` /
+    :func:`activation_sharding` install the batch axes globally (or scoped),
+    and :func:`constrain_batch` tags intermediate activations so GSPMD keeps
+    them batch-sharded instead of inventing its own layout.
+"""
+from repro.dist import constraints, sharding
+
+__all__ = ["constraints", "sharding"]

@@ -1,0 +1,67 @@
+"""Activation-sharding constraints for the jit/GSPMD TL step.
+
+Model code calls :func:`constrain_batch` on intermediate activations; when an
+activation mesh has been installed (globally via :func:`set_activation_mesh`
+or scoped via :func:`activation_sharding`) this lowers to
+``with_sharding_constraint(x, P(batch_axes, None, ...))`` — pinning the
+leading (virtual-batch / TL-node) dim to the data axes so GSPMD never
+re-lays-out activations mid-stack.  With no mesh installed it is the
+identity (returns its argument unchanged), so eager CPU tests and the
+protocol simulator pay nothing.
+
+API surface:
+
+* ``set_activation_mesh(axes_or_mesh_or_None)`` — install/clear the batch
+  axes globally (``launch.dryrun`` passes ``batch_axes(mesh)``).
+* ``activation_sharding(axes)`` — context manager, restores on exit.
+* ``constrain_batch(x)`` — constrain ``x``'s leading dim; identity when off.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_activation_mesh(axes) -> None:
+    """Install the mesh axes activations shard their batch dim over.
+
+    ``axes`` may be a tuple of axis names, a ``Mesh`` (its batch axes are
+    extracted), or ``None`` to disable constraints.
+    """
+    global _ACT_AXES
+    if axes is None:
+        _ACT_AXES = None
+    elif isinstance(axes, (tuple, list)):
+        _ACT_AXES = tuple(axes) or None
+    else:                                   # a Mesh
+        from repro.dist.sharding import batch_axes
+        _ACT_AXES = batch_axes(axes) or None
+
+
+@contextlib.contextmanager
+def activation_sharding(axes: Optional[Sequence[str]]):
+    """Scoped :func:`set_activation_mesh`; restores the previous value."""
+    global _ACT_AXES
+    prev = _ACT_AXES
+    set_activation_mesh(axes)
+    try:
+        yield
+    finally:
+        _ACT_AXES = prev
+
+
+def constrain_batch(x):
+    """Constrain ``x``'s leading dim to the installed batch axes.
+
+    Identity (``is x``) when no activation mesh is installed, so this is
+    free on the eager / single-device path.
+    """
+    if _ACT_AXES is None:
+        return x
+    spec = P(_ACT_AXES, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,184 @@
+"""Sharding rules for the production TL step (GSPMD / jit path).
+
+API surface (consumed by ``repro.core.tl_step``, the models, and
+``repro.launch.dryrun``):
+
+* :func:`batch_axes`       — mesh axes the virtual batch shards over,
+  in order: ``("pod", "data")`` on a multi-pod mesh, ``("data",)`` otherwise.
+* :func:`tokens_pspec`     — ``PartitionSpec`` for ``(B, S)`` step inputs.
+* :func:`cache_pspec`      — base spec for KV / recurrent-state cache leaves.
+* :func:`param_pspec`      — spec for one parameter leaf from its tree path.
+* :func:`param_specs`      — ``param_pspec`` mapped over a whole pytree with
+  the mesh's axis sizes enforced (an axis is only assigned to a dim it
+  divides exactly, so every spec is always realizable).
+* :func:`_mesh_sizes`      — ``{axis_name: size}`` for a (concrete or
+  abstract) mesh; exposed for optimizer-slot spec derivation.
+
+Placement policy (Megatron + optional FSDP):
+
+=====================  ===========================================
+leaf                   spec (before divisibility filtering)
+=====================  ===========================================
+``embed``  (V, d)      ``P("model", dp)``      — vocab-sharded
+``head``   (d, V)      ``P(dp, "model")``      — column-parallel
+``w_o|w_down|w_out``   ``P("model", dp)``      — row-parallel
+other 2-D weights      ``P(dp, "model")``      — column-parallel
+expert stacks (E,i,o)  ``P("model", dp, None)`` — expert-sharded
+1-D / scalars          replicated
+=====================  ===========================================
+
+``dp`` is :func:`batch_axes` and is only used when FSDP is enabled
+(``fsdp=None`` defaults to on for training; serving passes ``fsdp=False``
+for TP-only weights with no per-step all-gathers).  Leaves living under a
+``"cycles"`` stack carry a leading scan axis that is never sharded.
+
+**MoE exception (routing-stability layout).**  MoE routing is discrete:
+``top_k`` over router logits.  Any contraction split — a row-parallel psum,
+FSDP partial sums, or expert-axis batched-matmul regrouping — perturbs the
+logits at the ULP level and can flip an expert assignment, which moves the
+loss by whole percents (measured: ~2e-2 on the reduced DeepSeek-V3 vs ~1e-7
+for dense archs).  Architectures with ``cfg.moe`` therefore get an
+*all-column* layout: every weight shards only its output dim on "model"
+(GSPMD inserts activation all-gathers instead of psums, keeping every
+contraction whole and the routing bit-stable), expert stacks shard
+``d_ff_expert``/``d_model`` rather than the expert axis, and FSDP is
+disabled.  Expert *parallelism* over E lives in the explicit shard_map path
+(``repro.models.moe_ep``), which controls its own collectives.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+# Row-parallel projections: the *input* (contraction) dim is model-sharded so
+# the preceding column-parallel matmul's output shards flow straight in.
+_ROW_PARALLEL = ("w_o", "w_down", "w_out")
+
+
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    """``{axis_name: size}``.  Works for ``Mesh`` and ``AbstractMesh``."""
+    return dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names)))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Mesh axes the (virtual) batch dimension shards over, major-to-minor."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axes_size(entry, sizes: Dict[str, int]) -> Optional[int]:
+    """Product of mesh-axis sizes for one spec entry; None if an axis is
+    absent from the mesh."""
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    total = 1
+    for a in axes:
+        if a not in sizes:
+            return None
+        total *= sizes[a]
+    return total
+
+
+def _filter_divisible(spec, shape, sizes: Optional[Dict[str, int]]):
+    """Drop spec entries whose mesh-axis product doesn't divide the dim."""
+    if sizes is None:
+        return P(*spec)
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        n = _axes_size(entry, sizes)
+        if n is None or n == 0 or dim % n != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
+
+
+def param_pspec(path, leaf, cfg, *, axis_sizes: Optional[Dict[str, int]] = None,
+                fsdp: bool = True) -> P:
+    """PartitionSpec for one parameter (or optimizer-slot) leaf.
+
+    ``path`` is a ``tree_map_with_path`` path; the placement rule is chosen
+    from the leaf's name and rank (see module docstring).  When
+    ``axis_sizes`` is given, any axis that does not divide its dim exactly
+    is dropped, so the returned spec always materializes on that mesh.
+    """
+    names = _path_names(path)
+    last = names[-1] if names else ""
+    # leaves inside a "cycles" stack carry a leading scan axis (never sharded)
+    lead = 1 if "cycles" in names else 0
+    shape = leaf.shape
+    core = shape[lead:]
+    # routing-stability layout: no contraction splits for MoE archs (see
+    # module docstring) — all-column TP, no FSDP
+    moe_safe = getattr(cfg, "moe", None) is not None
+    dp: Optional[Tuple[str, ...]] = None
+    if fsdp and not moe_safe:
+        if axis_sizes is None:
+            dp = ("data",)
+        else:
+            dp = tuple(a for a in ("pod", "data") if a in axis_sizes) or None
+
+    if len(core) <= 1:                       # norms, biases, gates: replicate
+        spec = [None] * len(shape)
+        return _filter_divisible(spec, shape, axis_sizes)
+
+    if len(core) == 3 and last in ("w_gate", "w_up", "w_down"):
+        # stacked experts (E, d_in, d_out): shard d_out, keep E whole — an
+        # E-split regroups the routed batched matmuls and is not bit-stable
+        body = [dp, None, "model"]
+    elif last == "embed":
+        body = ["model", dp] + [None] * (len(core) - 2)
+    elif last in _ROW_PARALLEL and not moe_safe:
+        body = ["model", dp] + [None] * (len(core) - 2)
+    else:                                     # column-parallel default
+        body = [dp] + [None] * (len(core) - 2) + ["model"]
+
+    spec = [None] * lead + body
+    return _filter_divisible(spec, shape, axis_sizes)
+
+
+def param_specs(params, cfg, mesh, fsdp: Optional[bool] = None):
+    """``param_pspec`` over a whole pytree, with ``mesh``'s sizes enforced.
+
+    ``fsdp=None`` means the default policy (FSDP on); ``fsdp=False`` gives
+    TP-only weight sharding for serving.
+    """
+    import jax
+    sizes = _mesh_sizes(mesh)
+    use_fsdp = True if fsdp is None else bool(fsdp)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, cfg, axis_sizes=sizes,
+                                       fsdp=use_fsdp), params)
+
+
+def tokens_pspec(mesh, global_batch: int) -> P:
+    """Spec for ``(B, S)`` token/target arrays: batch over the data axes when
+    they divide it, otherwise replicated.  Always length 2 so callers can
+    reuse ``spec[0]`` for other batch-leading inputs."""
+    dp = batch_axes(mesh)
+    sizes = _mesh_sizes(mesh)
+    n_dp = math.prod(sizes[a] for a in dp) if dp else 1
+    if dp and n_dp and global_batch % n_dp == 0 and global_batch >= n_dp:
+        return P(dp, None)
+    return P(None, None)
+
+
+def cache_pspec(mesh, batch: int, kind: str) -> P:
+    """Base spec for cache leaves: ``kind="kv"`` covers (B, S, heads, ...)
+    attention caches (heads on "model"); ``kind="state"`` covers recurrent
+    state (B, state...) with the first state dim on "model".  Callers pad /
+    truncate to the leaf's rank and drop non-dividing axes."""
+    dp = batch_axes(mesh)
+    sizes = _mesh_sizes(mesh)
+    n_dp = math.prod(sizes[a] for a in dp) if dp else 1
+    b = dp if (dp and n_dp and batch % n_dp == 0 and batch >= n_dp) else None
+    if kind == "kv":
+        return P(b, None, "model")
+    return P(b, "model")

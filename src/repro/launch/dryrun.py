@@ -108,6 +108,8 @@ def lower_one(arch: str, shape_name: str, mesh_kind: str, remat: str = "tl",
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):       # jax<=0.4 returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
 
     # cost_analysis counts scan (while) bodies once; the HLO analyzer

@@ -1,0 +1,106 @@
+"""The fused jitted orchestrator step is numerically identical to the eager
+reference TL path — the lossless guarantee survives the optimization.
+
+Fused path: jitted node visits (device-resident stats, pruned gw1), one
+batched scatter reassembly, one compiled vjp+eq.12+update step with donated
+params/opt_state.  Eager path: the seed's op-by-op reference.  Both must
+produce the same parameter trajectory to within a few float32 ULPs (the only
+difference XLA fusion is permitted to introduce) over multiple steps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import CONVNET, DATRET
+from repro.core.node import TLNode, first_layer_grad_leaves
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.transport import Transport
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+# a handful of float32 ULPs at the parameters' magnitude: what jit fusion
+# may legitimately reorder, and nothing more
+ULP_FACTOR = 16
+
+
+def _make_nodes(model, cfg, sizes, seed, jit_visits):
+    r = np.random.default_rng(seed)
+    nodes = []
+    for i, n in enumerate(sizes):
+        if cfg.family == "transformer":
+            x = r.integers(0, cfg.vocab_size, (n, cfg.seq_len))
+        else:
+            x = r.normal(size=(n,) + cfg.in_shape).astype(np.float32)
+        y = r.integers(0, cfg.n_classes, n)
+        nodes.append(TLNode(i, model, x, y, jit_visits=jit_visits))
+    return nodes
+
+
+@pytest.mark.parametrize("cfg", [DATRET, CONVNET], ids=lambda c: c.name)
+def test_fused_step_matches_eager_reference(cfg):
+    model = SmallModel(cfg)
+    sizes = [13, 8, 11, 9]                                  # 4-node split
+    eager = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 7, False),
+                           sgd(0.05), Transport(), batch_size=16, seed=0,
+                           fused=False)
+    fused = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 7, True),
+                           sgd(0.05), Transport(), batch_size=16, seed=0,
+                           fused=True, donate=True)
+    key = jax.random.PRNGKey(3)
+    eager.initialize(key)
+    fused.initialize(key)
+
+    n_steps = 0
+    for _ in range(2):                                      # >= 3 TL steps
+        se = eager.train_epoch()
+        sf = fused.train_epoch()
+        n_steps += len(se)
+        for a, b in zip(se, sf):
+            assert abs(a.loss - float(b.loss)) < 1e-6
+            assert abs(a.acc - float(b.acc)) < 1e-9
+            assert float(b.grad_consistency) < 1e-5         # eq. 12 holds
+    assert n_steps >= 3
+
+    eps = np.finfo(np.float32).eps
+    for pa, pb in zip(jax.tree.leaves(eager.params),
+                      jax.tree.leaves(fused.params)):
+        a = np.asarray(pa, dtype=np.float64)
+        b = np.asarray(pb, dtype=np.float64)
+        tol = ULP_FACTOR * eps * max(1.0, float(np.abs(a).max()))
+        assert np.abs(a - b).max() <= tol, \
+            f"fused update drifted {np.abs(a - b).max():.3e} > {tol:.3e}"
+
+
+def test_fused_reuses_one_compiled_step(rng):
+    """The fused centralized-BP step is compiled once and reused across
+    virtual batches (same (N, shapes) signature)."""
+    cfg = DATRET
+    model = SmallModel(cfg)
+    orch = TLOrchestrator(model, _make_nodes(model, cfg, [16, 16, 16, 16],
+                                             11, True),
+                          sgd(0.05), Transport(), batch_size=16, seed=0)
+    orch.initialize(jax.random.PRNGKey(0))
+    orch.train_epoch()
+    step = orch._fused_step
+    assert step is not None
+    orch.train_epoch()
+    assert orch._fused_step is step                         # cached, not rebuilt
+
+
+def test_first_layer_grad_leaves_are_minimal_and_sufficient(rng):
+    """Structural pruning: the traced leaf set contains exactly the leaves
+    with nonzero first-layer weight gradients."""
+    cfg = DATRET
+    model = SmallModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(4,) + cfg.in_shape).astype(np.float32))
+    keep = first_layer_grad_leaves(model, params, x)
+
+    _, pull = jax.vjp(lambda p: model.first_layer(p, x), params)
+    (gw1,) = pull(jnp.ones_like(model.first_layer(params, x)))
+    flat = jax.tree_util.tree_leaves(gw1)
+    nonzero = {i for i, g in enumerate(flat) if float(jnp.abs(g).max()) > 0}
+    assert nonzero <= set(keep)            # every populated leaf is kept
+    # and the kept set is tight: for the MLP only layer-0's (w, b) survive
+    assert len(keep) == 2

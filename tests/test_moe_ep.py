@@ -17,8 +17,8 @@ SCRIPT = textwrap.dedent("""
     from repro.models.moe_ep import moe_apply_ep
 
     cfg = get_config("deepseek-v2-236b", reduced=True)
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import make_debug_mesh
+    mesh = make_debug_mesh(2, 2)
     key = jax.random.PRNGKey(0)
     p = M.moe_init(key, cfg)
     x = jax.random.normal(key, (4, 8, cfg.d_model)) * 0.1
