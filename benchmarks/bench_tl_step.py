@@ -1,4 +1,4 @@
-"""TL step-time benchmark: eager reference vs fused jitted hot path.
+"""TL step-time benchmark: eager reference vs fused vs pipelined hot path.
 
 Measures steps/sec of the protocol simulator's full TL round (model
 redistribution + node visits + centralized BP + update) at 2/4/8 simulated
@@ -8,14 +8,28 @@ nodes, for
   ``.at[].set`` scatters, an un-jitted tail vjp per virtual batch, host
   syncs inside every visit;
 * ``fused`` — jitted node visits with device-resident stats, one batched
-  scatter reassembly, and a single compiled (donated) vjp+update step.
+  scatter reassembly, and a single compiled (donated) vjp+update step;
+* ``pipelined`` — the fused path driven by the double-buffered epoch engine
+  (``repro.core.pipeline``): batch k+1's visits produced while batch k's
+  centralized BP consumes.
 
-Writes ``BENCH_tl_step.json`` at the repo root — the seed of the repo's
-step-time perf trajectory; run via ``benchmarks/run.py`` (smoke) or
+Pipelining is a *clock* optimization in the protocol simulator, so besides
+wall-clock steps/sec the benchmark runs a simulated-time epoch (nonzero node
+compute + centralized-BP cost on a WAN network model) serial vs pipelined
+and records ``Transport.clock_s`` for each — the measurable counterpart of
+runtime_model's eq. 19 pipelined form.  The clock columns are the
+headline signal: the steps/sec columns share one process's executable
+caches (later configurations run warmer), so cross-column wall-clock
+ratios carry cache noise the simulated clock does not.
+
+``BENCH_tl_step.json`` at the repo root is the repo's step-time perf
+*trajectory*: a list of runs keyed by git rev, appended to (never
+overwritten) on each invocation; run via ``benchmarks/run.py`` (smoke) or
 directly: ``PYTHONPATH=src python benchmarks/bench_tl_step.py``.
 """
 import json
 import os
+import subprocess
 import time
 
 import jax
@@ -27,8 +41,23 @@ OUT_PATH = os.path.join(REPO_ROOT, "BENCH_tl_step.json")
 TOTAL_SAMPLES = 512
 BATCH_SIZE = 64
 
+# simulated cost model for the clock columns: node FP+local-BP compute per
+# sample, and orchestrator centralized-BP per virtual-batch sample
+SIM_COMPUTE_S_PER_SAMPLE = 1e-4
+SIM_BP_S_PER_SAMPLE = 5e-4
 
-def _build_orchestrator(n_nodes: int, *, fused: bool):
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              cwd=REPO_ROOT, capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _build_orchestrator(n_nodes: int, *, fused: bool, pipelined: bool = False,
+                        simulate_time: bool = False):
     from repro.configs.paper_models import DATRET
     from repro.core.node import TLNode
     from repro.core.orchestrator import TLOrchestrator
@@ -45,16 +74,32 @@ def _build_orchestrator(n_nodes: int, *, fused: bool):
                     r.integers(0, cfg.n_classes, per_node),
                     jit_visits=fused)
              for i in range(n_nodes)]
+    time_kw = {}
+    if simulate_time:
+        time_kw = dict(
+            compute_time_fn=lambda k: SIM_COMPUTE_S_PER_SAMPLE * k,
+            bp_time_fn=lambda n: SIM_BP_S_PER_SAMPLE * n)
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
                           batch_size=BATCH_SIZE, seed=0,
-                          fused=fused, donate=fused)
+                          fused=fused, donate=fused, pipelined=pipelined,
+                          **time_kw)
     orch.initialize(jax.random.PRNGKey(0))
     return orch
 
 
+# Each epoch reshuffles the traversal plan, so segment lengths — and with
+# them the bucket-padded visit shapes and eager pad/slice executables —
+# keep producing NEW compilations for the first ~3 epochs before the shape
+# space is covered.  A single warmup epoch (the original methodology) puts
+# epoch 1's ~84 compiles inside the measured window and understates
+# steps/sec by ~10x for whichever configuration runs first in the process.
+WARMUP_EPOCHS = 4
+
+
 def _measure(orch, epochs: int) -> float:
-    """Steps/sec over `epochs` epochs (one warmup epoch first)."""
-    orch.train_epoch()                                     # warmup + compile
+    """Steps/sec over `epochs` epochs after a shape-space-covering warmup."""
+    for _ in range(WARMUP_EPOCHS):                         # warmup + compile
+        orch.train_epoch()
     jax.block_until_ready(orch.params)
     steps = 0
     t0 = time.perf_counter()
@@ -64,19 +109,56 @@ def _measure(orch, epochs: int) -> float:
     return steps / (time.perf_counter() - t0)
 
 
+def _simulated_clock(n_nodes: int, *, pipelined: bool) -> float:
+    """Transport clock after one simulated-time epoch (fused path)."""
+    orch = _build_orchestrator(n_nodes, fused=True, pipelined=pipelined,
+                               simulate_time=True)
+    orch.train_epoch()
+    jax.block_until_ready(orch.params)
+    return orch.transport.clock_s
+
+
+def _load_runs(out_path: str) -> list:
+    """Existing trajectory; a legacy single-run dict is migrated in place
+    as the trajectory's first entry (for the root artifact that's PR 1's
+    fused-vs-eager baseline, whose rev is known)."""
+    if not os.path.exists(out_path):
+        return []
+    with open(out_path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):                             # legacy format
+        legacy_rev = ("822cfe8" if os.path.abspath(out_path) == OUT_PATH
+                      else "unknown")
+        data.setdefault("git_rev", legacy_rev)
+        data.setdefault("legacy", True)     # never displaced by re-runs
+        return [data]
+    return data
+
+
 def run(node_counts=(2, 4, 8), epochs: int = 3, out_path: str = OUT_PATH) -> dict:
     results = {}
     for n in node_counts:
         eager = _measure(_build_orchestrator(n, fused=False), epochs)
         fused = _measure(_build_orchestrator(n, fused=True), epochs)
+        piped = _measure(_build_orchestrator(n, fused=True, pipelined=True),
+                         epochs)
+        clock_serial = _simulated_clock(n, pipelined=False)
+        clock_piped = _simulated_clock(n, pipelined=True)
         results[str(n)] = {
             "eager_steps_per_s": round(eager, 2),
             "fused_steps_per_s": round(fused, 2),
+            "pipelined_steps_per_s": round(piped, 2),
             "speedup": round(fused / eager, 2),
+            "serial_clock_s": round(clock_serial, 4),
+            "pipelined_clock_s": round(clock_piped, 4),
+            "clock_speedup": round(clock_serial / clock_piped, 3),
         }
         print(f"bench_tl_step/nodes={n},"
-              f"{1e6 / fused:.0f},speedup={fused / eager:.2f}x")
-    art = {
+              f"{1e6 / fused:.0f},speedup={fused / eager:.2f}x,"
+              f"clock={clock_serial:.3f}s->{clock_piped:.3f}s")
+    entry = {
+        "git_rev": _git_rev(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "benchmark": "tl_step",
         "model": "datret-mlp",
         "batch_size": BATCH_SIZE,
@@ -85,10 +167,17 @@ def run(node_counts=(2, 4, 8), epochs: int = 3, out_path: str = OUT_PATH) -> dic
         "backend": jax.default_backend(),
         "nodes": results,
     }
+    # one entry per git rev: a re-run at the same checkout replaces its own
+    # earlier entry instead of duplicating it (the trajectory is per-PR).
+    # Migrated legacy baselines are immune — a dirty tree sitting on the
+    # baseline's rev must not displace the baseline it is compared against.
+    runs = [r for r in _load_runs(out_path)
+            if r.get("legacy") or r.get("git_rev") != entry["git_rev"]]
+    runs.append(entry)
     with open(out_path, "w") as f:
-        json.dump(art, f, indent=1)
-    print(f"bench_tl_step/artifact,{out_path}")
-    return art
+        json.dump(runs, f, indent=1)
+    print(f"bench_tl_step/artifact,{out_path} ({len(runs)} runs)")
+    return entry
 
 
 def main(smoke: bool = False) -> dict:

@@ -5,15 +5,19 @@
 * ``node`` / ``orchestrator`` — Algorithm 2 protocol over a byte-accounting
                        ``transport``
 * ``baselines``      — CL / FL (FedAvg) / SL / SL+ / SFL comparison methods
+* ``pipeline``       — double-buffered epoch engine (cross-batch overlap of
+                       node visits with centralized BP; lossless reordering)
 * ``tl_step``        — production pjit TL train/serve steps (multi-pod)
 * ``runtime_model``  — analytic runtime, paper eqs. (15)-(19)
 """
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.pipeline import PipelinedEpochEngine, pipelined_train_epoch
 from repro.core.transport import NetworkModel, Transport, payload_bytes
 from repro.core.virtual_batch import (IndexRange, VirtualBatch,
                                       VirtualBatchPlan, create_virtual_batches)
 
 __all__ = ["TLNode", "TLOrchestrator", "NetworkModel", "Transport",
            "payload_bytes", "IndexRange", "VirtualBatch", "VirtualBatchPlan",
-           "create_virtual_batches"]
+           "create_virtual_batches", "PipelinedEpochEngine",
+           "pipelined_train_epoch"]

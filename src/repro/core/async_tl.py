@@ -17,6 +17,11 @@ Three mechanisms, each a faithful implementation of a paragraph in §3.4:
 These knobs intentionally BREAK exact losslessness (that is the paper's
 stated trade-off); tests assert both that they work and that the strict
 mode remains the default.
+
+On a ``fused`` orchestrator (the default) each buffered contribution's
+centralized BP runs through the orchestrator's cached jitted
+per-contribution step (``TLOrchestrator._get_contrib_step``) instead of an
+eager per-call ``jax.vjp``; ``fused=False`` keeps the eager oracle.
 """
 from __future__ import annotations
 
@@ -129,15 +134,23 @@ def async_train_epoch(orch, *, min_contributions: Optional[int] = None,
                 "activations_grads",
                 {"x1": fp.x1, "delta_L": fp.delta_L, "gw1": fp.gw1},
                 compressible=True)
-            # centralized BP for this contribution (recompute from X^(1))
-            _, pull = jax.vjp(
-                lambda p, h: orch.model.tail_layers(p, h), orch.params,
-                wire["x1"])
-            g_tail, _ = pull(wire["delta_L"])
+            # centralized BP for this contribution (recompute from X^(1)).
             # gw1 may be a pruned {leaf_index: array} dict (jitted nodes) or
-            # a full param pytree (eager reference nodes)
-            from repro.core.node import add_first_layer_grads
-            grads = add_first_layer_grads(g_tail, wire["gw1"])
+            # a full param pytree (eager reference nodes); either way it
+            # flows into the gradient tree as-is — the pruned leaf dicts
+            # stay pruned end to end up to this point.
+            if getattr(orch, "fused", False):
+                # the orchestrator's cached jitted per-contribution step
+                # (compile-once, shared across batches/epochs)
+                grads = orch._get_contrib_step()(
+                    orch.params, wire["x1"], wire["delta_L"], wire["gw1"])
+            else:
+                from repro.core.node import add_first_layer_grads
+                _, pull = jax.vjp(
+                    lambda p, h: orch.model.tail_layers(p, h), orch.params,
+                    wire["x1"])
+                g_tail, _ = pull(wire["delta_L"])
+                grads = add_first_layer_grads(g_tail, wire["gw1"])
             buf.add(BufferedContribution(
                 node_id=seg.node_id,
                 model_version=node_version[seg.node_id],

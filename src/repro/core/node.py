@@ -175,7 +175,22 @@ class TLNode:
     def receive_model(self, params):
         self.params = params
 
-    def forward_visit(self, local_indices: np.ndarray, batch_total: int) -> FPResult:
+    def issue_visit(self, local_indices: np.ndarray,
+                    batch_total: int) -> FPResult:
+        """Issue a visit without forcing any host synchronization.
+
+        Identical math to :meth:`forward_visit`, but the eager reference
+        path keeps ``loss_sum``/``n_correct`` as device scalars instead of
+        converting them with ``float()``/``int()`` (which blocks on the
+        device).  The pipelined epoch engine uses this so *producing* batch
+        k+1's payloads never materializes — and therefore never waits on —
+        batch k's in-flight centralized BP; consumers materialize lazily.
+        """
+        return self.forward_visit(local_indices, batch_total,
+                                  materialize=False)
+
+    def forward_visit(self, local_indices: np.ndarray, batch_total: int,
+                      *, materialize: bool = True) -> FPResult:
         """One node visit of the traversal plan.  ``batch_total`` is the full
         virtual-batch size N so the node scales its loss to (1/N)·Σ local CE,
         making orchestrator-side aggregation a plain sum (exact CL grads for
@@ -184,7 +199,8 @@ class TLNode:
         xb = self.x[local_indices]
         yb = self.y[local_indices]
         if not self.jit_visits:
-            return self._visit_eager(xb, yb, batch_total)
+            return self._visit_eager(xb, yb, batch_total,
+                                     materialize=materialize)
         if self._visit_fn is None:
             self._gw1_leaves, self._visit_fn = _get_visit_fn(
                 self.model, self.params, xb)
@@ -203,9 +219,13 @@ class TLNode:
                         gw1=dict(zip(self._gw1_leaves, gw1)),
                         loss_sum=loss, n_correct=acc)
 
-    def _visit_eager(self, xb, yb, batch_total: int) -> FPResult:
+    def _visit_eager(self, xb, yb, batch_total: int,
+                     *, materialize: bool = True) -> FPResult:
         """The original op-by-op reference visit (full gw1 tree, host-synced
-        stats); kept as the benchmark baseline and equivalence oracle."""
+        stats); kept as the benchmark baseline and equivalence oracle.
+        ``materialize=False`` defers the loss/accuracy host sync (device
+        scalars are shipped instead — the orchestrator's accumulation
+        handles both)."""
         m, params = self.model, self.params
         x1 = m.first_layer(params, xb)                                 # eq. 1–2
         logits, pull_tail = jax.vjp(lambda h: m.tail_layers(params, h), x1)
@@ -214,9 +234,10 @@ class TLNode:
         (dx1,) = pull_tail(delta_L)
         _, pull_first = jax.vjp(lambda p: m.first_layer(p, xb), params)
         (gw1,) = pull_first(dx1)
-        acc = int((jnp.argmax(logits, -1) == yb).sum())
+        acc = (jnp.argmax(logits, -1) == yb).sum()
         return FPResult(x1=x1, delta_L=delta_L, dx1=dx1, gw1=gw1,
-                        loss_sum=float(loss), n_correct=acc)
+                        loss_sum=float(loss) if materialize else loss,
+                        n_correct=int(acc) if materialize else acc)
 
     # ---- local evaluation (inference stays on-node) -------------------------
     def evaluate(self, params):

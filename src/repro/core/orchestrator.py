@@ -28,6 +28,14 @@ Two execution paths produce the *same* update:
 Both paths accumulate first-layer weight gradients only over the leaves
 ``first_layer`` actually reads (the rest are structural zeros), instead of
 allocating and tree-adding a full zeros param-pytree per node visit.
+
+Each TL step is split into a *producer* half (``_collect_visits`` — model
+redistribution + node visits) and a *consumer* half (``apply_update`` —
+centralized BP + optimizer).  ``pipelined=True`` routes ``train_epoch``
+through the double-buffered epoch engine (``repro.core.pipeline``), which
+overlaps batch k+1's production with batch k's consumption — a pure
+reordering of the same arithmetic, proven by the cross-path equivalence
+test grid.
 """
 from __future__ import annotations
 
@@ -58,9 +66,11 @@ class TLOrchestrator:
                  transport: Optional[Transport] = None, *,
                  batch_size: int = 64, seed: int = 0,
                  compute_time_fn: Callable[[int], float] = lambda n: 0.0,
+                 bp_time_fn: Callable[[int], float] = lambda n: 0.0,
                  check_consistency: bool = True,
                  cache_model_per_epoch: bool = False,
-                 fused: bool = True, donate: bool = False):
+                 fused: bool = True, donate: bool = False,
+                 pipelined: bool = False):
         self.model = model
         self.nodes = list(nodes)
         self.opt = optimizer
@@ -68,6 +78,10 @@ class TLOrchestrator:
         self.batch_size = batch_size
         self.seed = seed
         self.compute_time_fn = compute_time_fn
+        # simulated centralized-BP time per virtual batch (size N); the
+        # serial path ticks it on the clock, the pipelined engine overlaps
+        # it with batch k+1's visits (default 0: clock unchanged)
+        self.bp_time_fn = bp_time_fn
         self.check_consistency = check_consistency
         # §5.2 caching: redistribute the model once per epoch instead of once
         # per virtual batch (bandwidth optimization; changes staleness!)
@@ -84,10 +98,16 @@ class TLOrchestrator:
                              "donated parameter buffers across batches")
         self.fused = fused
         self.donate = donate
+        # pipelined: route train_epoch through the double-buffered epoch
+        # engine (repro.core.pipeline) — batch k+1's visits are produced
+        # while batch k's centralized BP consumes; a pure reordering of the
+        # same math (see the cross-path equivalence test grid)
+        self.pipelined = pipelined
         self.params = None
         self.opt_state = None
         self._epoch = 0
         self._fused_step = None
+        self._contrib_step = None
         self._gw1_leaves = None
 
     # ------------------------------------------------------------- lifecycle
@@ -104,13 +124,24 @@ class TLOrchestrator:
     # ---------------------------------------------------------- one TL step
     def train_batch(self, vb, node_by_id) -> StepStats:
         results, order = self._collect_visits(vb, node_by_id)
+        return self.apply_update(vb, results, order)
+
+    def apply_update(self, vb, results, order) -> StepStats:
+        """Consumer half of one TL step: centralized BP + optimizer update
+        from already-collected visit payloads.  Advances the simulated clock
+        by ``bp_time_fn(N)`` — the quantity the pipelined engine overlaps
+        with the next batch's visits."""
+        self.transport.tick(self.bp_time_fn(vb.size))
         if self.fused:
             return self._train_batch_fused(vb, results, order)
         return self._train_batch_eager(vb, results, order)
 
-    def _collect_visits(self, vb, node_by_id):
-        """Distributed FP along the traversal plan (pipelined: transfers of
-        one node overlap the next node's compute — paper §3.2)."""
+    def _collect_visits(self, vb, node_by_id, *, issue: bool = False):
+        """Producer half of one TL step: distributed FP along the traversal
+        plan (pipelined: transfers of one node overlap the next node's
+        compute — paper §3.2).  ``issue=True`` (the epoch engine's mode)
+        uses :meth:`TLNode.issue_visit` so no payload is host-materialized
+        while a previous batch's BP is still in flight."""
         results, order = {}, []
 
         if not self.cache_model_per_epoch:
@@ -124,12 +155,19 @@ class TLOrchestrator:
             for seg in vb.traversal:
                 node = node_by_id[seg.node_id]
                 self.transport.tick(self.compute_time_fn(len(seg.local_indices)))
-                fp = node.forward_visit(seg.local_indices, vb.size)
+                visit = node.issue_visit if issue else node.forward_visit
+                fp = visit(seg.local_indices, vb.size)
+                # the wire format is protocol-defined: stats travel as fixed
+                # 4-byte scalars whether the producing path materialized them
+                # on the host (eager serial) or left them device-resident
+                # (jitted / pipelined) — byte accounting must not depend on
+                # *when* the host syncs
                 wire = self.transport.send(
                     "activations_grads",
                     {"x1": fp.x1, "delta_L": fp.delta_L, "dx1": fp.dx1,
-                     "gw1": fp.gw1, "loss_sum": fp.loss_sum,
-                     "n_correct": fp.n_correct},
+                     "gw1": fp.gw1,
+                     "loss_sum": jnp.asarray(fp.loss_sum, jnp.float32),
+                     "n_correct": jnp.asarray(fp.n_correct, jnp.int32)},
                     compressible=True)
                 results[seg.node_id] = (seg, wire)
                 order.append(seg.node_id)
@@ -187,6 +225,26 @@ class TLOrchestrator:
             donate = (0, 1) if self.donate else ()
             self._fused_step = jax.jit(step, donate_argnums=donate)
         return self._fused_step
+
+    def _get_contrib_step(self):
+        """Cached jitted *per-contribution* centralized BP (async TL §3.4):
+        tail vjp from one node's payload plus its pruned first-layer leaf
+        grads → a full gradient tree, no optimizer.  Shares the fused path's
+        compile-once discipline; ``async_tl`` routes every buffered
+        contribution through this instead of an eager ``jax.vjp``.
+        Recompiles once per distinct segment length (payloads arrive
+        unpadded), which the jit cache absorbs across epochs."""
+        if self._contrib_step is None:
+            model = self.model
+
+            def contrib(params, x1, delta_L, gw1):
+                _, pull = jax.vjp(
+                    lambda p, h: model.tail_layers(p, h), params, x1)
+                g_tail, _ = pull(delta_L)
+                return add_first_layer_grads(g_tail, gw1)
+
+            self._contrib_step = jax.jit(contrib)
+        return self._contrib_step
 
     def _train_batch_fused(self, vb, results, order) -> StepStats:
         N = vb.size
@@ -260,15 +318,7 @@ class TLOrchestrator:
                          grad_consistency=consistency)
 
     # -------------------------------------------------------------- epochs
-    def train_epoch(self) -> List[StepStats]:
-        plan = self.build_plan(self._epoch)
-        node_by_id = {n.node_id: n for n in self.nodes}
-        if self.cache_model_per_epoch:
-            with self.transport.parallel():
-                for n in self.nodes:
-                    n.receive_model(self.transport.send("model", self.params))
-        stats = [self.train_batch(vb, node_by_id) for vb in plan.batches]
-        self._epoch += 1
+    def _finalize_epoch_stats(self, stats: List[StepStats]) -> List[StepStats]:
         if self.fused and stats:
             # ONE host sync for the whole epoch's device-resident stats
             vals = jax.device_get([(s.loss, s.acc, s.grad_consistency)
@@ -277,6 +327,20 @@ class TLOrchestrator:
                                grad_consistency=float(c))
                      for l, a, c in vals]
         return stats
+
+    def train_epoch(self) -> List[StepStats]:
+        if self.pipelined:
+            from repro.core.pipeline import pipelined_train_epoch
+            return pipelined_train_epoch(self)
+        plan = self.build_plan(self._epoch)
+        node_by_id = {n.node_id: n for n in self.nodes}
+        if self.cache_model_per_epoch:
+            with self.transport.parallel():
+                for n in self.nodes:
+                    n.receive_model(self.transport.send("model", self.params))
+        stats = [self.train_batch(vb, node_by_id) for vb in plan.batches]
+        self._epoch += 1
+        return self._finalize_epoch_stats(stats)
 
     def fit(self, key, epochs: int) -> List[StepStats]:
         if self.params is None:

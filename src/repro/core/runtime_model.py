@@ -82,6 +82,17 @@ def runtime_sfl(spec: WorkloadSpec) -> float:
 
 def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
                cache_model: bool = False, pipelined: bool = True) -> float:
+    """Eq. 19, optionally with the double-buffered cross-batch pipeline.
+
+    ``pipelined=True`` mirrors the epoch engine (``repro.core.pipeline``):
+    batch k+1's visit production overlaps batch k's centralized BP, so the
+    per-epoch time is pipeline-fill + (n_batches - 1) steady-state stages of
+    ``max(producer, consumer)`` + drain — the shape the transport's overlap
+    windows make *measurable* in the protocol simulator, not just analytic.
+    With ``cache_model=True`` the whole visit (client compute + transfers)
+    rides the overlap; in strict mode only the transfers do (client compute
+    must wait for the updated parameters).
+    """
     _, samples, t_fwd, t_bwd = _per_round(spec)
     n_local_batches = samples // spec.batch_size
     # client computes FP + local BP for the three gradients
@@ -97,13 +108,17 @@ def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
     # orchestrator recompute + BP on the full virtual batch
     t_server = (samples * spec.n_nodes * (t_fwd + t_bwd)
                 * spec.client_flops_per_s / spec.server_flops_per_s)
-    if pipelined:
-        # §3.2: while one batch is in centralized BP the next nodes run FP —
-        # server work overlaps client compute/transfers (eq. 19's single
-        # additive T_comp,server is the per-batch residual)
-        n_batches = max(n_local_batches * spec.n_nodes, 1)
-        return max(t_client + t_comm, t_server) + t_server / n_batches
-    return t_client + t_comm + t_server                                 # (19)
+    if not pipelined:
+        return t_client + t_comm + t_server                             # (19)
+    n_batches = max(n_local_batches * spec.n_nodes, 1)
+    t_sb = t_server / n_batches                     # consumer stage (BP of k)
+    if cache_model:
+        # visits of k+1 are update-independent: whole producer overlaps
+        t_vb = (t_client + t_comm) / n_batches
+        return t_vb + (n_batches - 1) * max(t_vb, t_sb) + t_sb
+    # strict: transfers of k+1 overlap BP of k, client compute stays serial
+    t_cb = t_comm / n_batches
+    return t_client + t_cb + (n_batches - 1) * max(t_cb, t_sb) + t_sb
 
 
 ALL = {"FL": runtime_fl, "SL": runtime_sl, "SL+": runtime_slp,

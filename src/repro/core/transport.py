@@ -8,18 +8,31 @@ Every orchestrator↔node exchange in the protocol simulator goes through a
   * advances a virtual clock with a latency/bandwidth model so the paper's
     runtime equations (15–19) can be compared against 'measured' simulated
     time.  Parallel transfers (the paper's pipelined communication) are
-    modeled with ``parallel_window``: transfers inside a window overlap and
-    cost max() instead of sum().
+    modeled with ``parallel``: transfers inside a window overlap and cost
+    max() instead of sum().
+
+Cross-batch pipelining (the double-buffered epoch engine) is modeled with
+``overlap``: an overlap scope holds named *lanes* that run concurrently
+against each other while each lane is internally sequential.  On scope exit
+the clock advances by the max over lane totals — batch k's centralized-BP
+lane and batch k+1's visit lane overlap, exactly the §3.2 pipelining taken
+across virtual batches.  A lane opened with ``ticks=False`` keeps compute
+ticks on the serial clock (strict-mode lookahead may only prefetch payload
+*transfers*; node compute still waits for the updated parameters).
+
+Overlap never changes *bytes*: accounting of ``bytes_sent`` per tag is
+identical however windows and lanes are arranged — only ``clock_s`` moves.
+Every closed window/scope is appended to ``window_log`` for per-window
+byte/clock inspection.
 """
 from __future__ import annotations
 
 import contextlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass
@@ -46,23 +59,82 @@ def payload_bytes(tree) -> int:
 
 
 @dataclass
+class WindowRecord:
+    """Per-window accounting entry: how long the window cost on the clock
+    and which tags moved how many bytes inside it.  Nested scopes each log
+    their own record (a parallel window inside an overlap lane appears in
+    both), so the log is hierarchical — don't sum ``nbytes`` across records
+    expecting ``total_bytes``."""
+    kind: str                                    # "parallel" | "overlap"
+    clock_s: float
+    nbytes: int
+    by_tag: Dict[str, int] = field(default_factory=dict)
+    lanes: Dict[str, float] = field(default_factory=dict)   # overlap only
+
+
+class _OverlapScope:
+    """Named concurrent lanes inside one ``Transport.overlap()`` scope."""
+
+    def __init__(self, transport: "Transport"):
+        self._tr = transport
+        self.totals: Dict[str, float] = {}       # lane name -> sequential time
+        self.by_tag: Dict[str, int] = {}
+        self.nbytes = 0
+
+    @contextlib.contextmanager
+    def lane(self, name: str, *, ticks: bool = True):
+        """One concurrent lane.  Transfers (and windows) inside it sum into
+        the lane.  ``ticks=False`` routes ``tick()`` compute time to the
+        serial clock instead — strict-mode prefetch overlaps transfers only.
+        Re-entering a name accumulates into the same lane."""
+        tr = self._tr
+        # a lane inside an open parallel window would have its transfers
+        # claimed by the window (deposit precedence) and total 0 — forbid
+        # the composition instead of silently under-counting
+        assert tr._window is None, \
+            "overlap lane cannot open inside a parallel() window; " \
+            "open parallel() windows inside the lane instead"
+        outer, outer_ticks = tr._lane, tr._lane_ticks
+        tr._lane, tr._lane_ticks = [], ticks
+        try:
+            yield
+        finally:
+            entries, tr._lane, tr._lane_ticks = tr._lane, outer, outer_ticks
+            self.totals[name] = (self.totals.get(name, 0.0)
+                                 + sum(e[0] for e in entries))
+            for _, tag, nb in entries:
+                if nb:
+                    self.by_tag[tag] = self.by_tag.get(tag, 0) + nb
+                    self.nbytes += nb
+
+
+@dataclass
 class Transport:
     network: NetworkModel = field(default_factory=NetworkModel)
     compress_activations: bool = False
     bytes_sent: Dict[str, int] = field(default_factory=dict)
     n_messages: int = 0
     clock_s: float = 0.0
-    _window: Optional[List[float]] = None
+    window_log: List[WindowRecord] = field(default_factory=list)
+    # active sinks: a parallel window costs max() of its entries, an overlap
+    # lane costs sum(); entries are (time_s, tag, nbytes)
+    _window: Optional[List[Tuple[float, str, int]]] = None
+    _lane: Optional[List[Tuple[float, str, int]]] = None
+    _lane_ticks: bool = True
 
     # ---- bookkeeping -----------------------------------------------------
+    def _deposit(self, t: float, tag: str, nbytes: int):
+        if self._window is not None:
+            self._window.append((t, tag, nbytes))
+        elif self._lane is not None:
+            self._lane.append((t, tag, nbytes))
+        else:
+            self.clock_s += t
+
     def _account(self, tag: str, nbytes: int):
         self.bytes_sent[tag] = self.bytes_sent.get(tag, 0) + nbytes
         self.n_messages += 1
-        t = self.network.transfer_time(nbytes)
-        if self._window is not None:
-            self._window.append(t)
-        else:
-            self.clock_s += t
+        self._deposit(self.network.transfer_time(nbytes), tag, nbytes)
 
     @contextlib.contextmanager
     def parallel(self):
@@ -72,17 +144,51 @@ class Transport:
         try:
             yield
         finally:
-            if self._window:
-                t = max(self._window)
-                if outer is not None:
-                    outer.append(t)
-                else:
-                    self.clock_s += t
-            self._window = outer
+            entries, self._window = self._window, outer
+            if entries:
+                t = max(e[0] for e in entries)
+                by_tag: Dict[str, int] = {}
+                for _, tag, nb in entries:
+                    if nb:
+                        by_tag[tag] = by_tag.get(tag, 0) + nb
+                total = sum(by_tag.values())
+                self.window_log.append(
+                    WindowRecord("parallel", t, total, by_tag))
+                # cost the window as one unit, but keep per-tag byte
+                # attribution visible to the enclosing lane/window (the
+                # zero-time entries can't change a max or a sum of times)
+                self._deposit(t, "<window>", 0)
+                for tag, nb in by_tag.items():
+                    self._deposit(0.0, tag, nb)
+
+    @contextlib.contextmanager
+    def overlap(self):
+        """Cross-batch overlap scope: lanes opened on the yielded scope run
+        concurrently; on exit the clock advances by max over lane totals.
+        Open overlap scopes outside parallel() windows (windows nest inside
+        lanes, not the other way around)."""
+        assert self._window is None, \
+            "overlap() cannot open inside a parallel() window"
+        scope = _OverlapScope(self)
+        try:
+            yield scope
+        finally:
+            t = max(scope.totals.values(), default=0.0)
+            self.window_log.append(
+                WindowRecord("overlap", t, scope.nbytes, dict(scope.by_tag),
+                             lanes=dict(scope.totals)))
+            self._deposit(t, "<overlap>", 0)
+            for tag, nb in scope.by_tag.items():
+                self._deposit(0.0, tag, nb)
 
     def tick(self, seconds: float):
-        """Advance the clock for compute time."""
-        self.clock_s += seconds
+        """Advance the clock for compute time.  Inside an overlap lane (with
+        lane ticks enabled) the compute joins that lane; parallel transfer
+        windows never absorb compute."""
+        if self._lane is not None and self._lane_ticks:
+            self._lane.append((seconds, "<compute>", 0))
+        else:
+            self.clock_s += seconds
 
     @property
     def total_bytes(self) -> int:

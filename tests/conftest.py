@@ -11,6 +11,30 @@ def rng():
 
 
 # --------------------------------------------------------------------------
+# `slow` marker: multi-epoch equivalence-grid cells (and other nightly-depth
+# tests) are skipped by the tier-1 run (`pytest -x -q`); run them with
+# `pytest --runslow` (or `-m slow` plus --runslow for only them).
+# --------------------------------------------------------------------------
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="also run tests marked slow (nightly depth)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: nightly-depth test, skipped unless --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow: nightly depth, use --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
+# --------------------------------------------------------------------------
 # Minimal deterministic `hypothesis` shim.
 #
 # The property tests use a small slice of the hypothesis API (given /

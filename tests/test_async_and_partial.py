@@ -39,6 +39,95 @@ def test_gradient_buffer_drops_stale():
     assert not buf.ready()
 
 
+def test_gradient_buffer_staleness_boundary():
+    """Dropped exactly when version - model_version > max_staleness: the
+    boundary case (== max_staleness) is kept."""
+    buf = GradientBuffer(min_contributions=1, max_staleness=2)
+    g = {"w": jnp.ones(3)}
+
+    def contrib(model_version):
+        return BufferedContribution(0, model_version=model_version, grads=g,
+                                    loss_sum=1.0, n_samples=4)
+
+    buf.add(contrib(0), current_version=2)      # staleness == 2: kept
+    assert len(buf._items) == 1 and buf.n_dropped_stale == 0
+    buf.add(contrib(0), current_version=3)      # staleness == 3: dropped
+    assert len(buf._items) == 1 and buf.n_dropped_stale == 1
+
+
+def test_gradient_buffer_drain_empties():
+    buf = GradientBuffer(min_contributions=2)
+    g = {"w": jnp.ones(3)}
+    for nid in range(2):
+        buf.add(BufferedContribution(nid, model_version=0, grads=g,
+                                     loss_sum=1.0, n_samples=4),
+                current_version=0)
+    assert buf.ready()
+    grads, loss, n = buf.drain()
+    assert n == 8 and abs(loss - 2.0) < 1e-9
+    np.testing.assert_allclose(np.asarray(grads["w"]), 2 * np.ones(3))
+    # drained: empty, not ready, and a second drain is a well-defined no-op
+    assert buf._items == [] and not buf.ready()
+    assert buf.drain() == (None, 0.0, 0)
+
+
+def test_gradient_buffer_flush_equals_exactly_full():
+    """The end-of-batch flush path (drain before min_contributions) applies
+    the same combination as a buffer that became exactly full."""
+    key = jax.random.PRNGKey(0)
+    contribs = [
+        BufferedContribution(i, model_version=0,
+                             grads={"w": jax.random.normal(
+                                 jax.random.fold_in(key, i), (5,))},
+                             loss_sum=0.5 * (i + 1), n_samples=3 + i)
+        for i in range(2)]
+    full = GradientBuffer(min_contributions=2)          # becomes ready
+    flush = GradientBuffer(min_contributions=5)         # drained by flush
+    for c in contribs:
+        full.add(c, current_version=0)
+        flush.add(c, current_version=0)
+    assert full.ready() and not flush.ready()
+    gf, lf, nf = full.drain()
+    gx, lx, nx = flush.drain()
+    assert (lf, nf) == (lx, nx)
+    np.testing.assert_array_equal(np.asarray(gf["w"]), np.asarray(gx["w"]))
+
+
+def test_async_flush_epoch_matches_exactly_full_epoch(setup):
+    """Epoch-level: min_contributions larger than any batch's node count
+    forces every update through the flush path; the parameter trajectory is
+    identical to the exactly-full (min_contributions=None) run."""
+    model, shards, test = setup
+    key = jax.random.PRNGKey(4)
+    params = []
+    for min_c in (None, 100):
+        nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
+        orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                              batch_size=32, seed=0, check_consistency=False)
+        orch.initialize(key)
+        stats, _ = async_train_epoch(orch, min_contributions=min_c)
+        assert stats                               # updates were applied
+        params.append(orch.params)
+    for a, b in zip(jax.tree.leaves(params[0]), jax.tree.leaves(params[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_uses_cached_contrib_step_on_fused_orch(setup):
+    """§3.4 integration: on a fused orchestrator the per-contribution BP
+    goes through the cached jitted step (built once), not an eager vjp."""
+    model, shards, test = setup
+    nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                          batch_size=32, seed=0, check_consistency=False)
+    orch.initialize(jax.random.PRNGKey(0))
+    assert orch._contrib_step is None
+    async_train_epoch(orch)
+    step = orch._contrib_step
+    assert step is not None
+    async_train_epoch(orch)
+    assert orch._contrib_step is step              # cached, not rebuilt
+
+
 def test_latency_tracker_orders_fast_first():
     t = LatencyTracker()
     t.observe(0, 1.0)

@@ -69,3 +69,58 @@ def test_shuffling_differs_across_epochs():
     p1 = create_virtual_batches(ranges, 16, seed=1)
     assert not np.array_equal(p0.batches[0].global_ids,
                               p1.batches[0].global_ids)
+
+
+@given(sizes=st.lists(st.integers(1, 23), min_size=1, max_size=6),
+       batch=st.integers(1, 17), seed=st.integers(0, 4))
+@settings(max_examples=40, deadline=None)
+def test_every_global_index_scattered_exactly_once(sizes, batch, seed):
+    """Losslessness precondition for the scatter reassembly: without
+    drop_remainder, every global index lands in exactly one batch position
+    across the epoch, each batch's segments partition its positions, and
+    the plan is a pure function of the seed — including batch sizes that
+    don't divide N and single-sample nodes (min node size 1 above)."""
+    ranges = [IndexRange(i, n) for i, n in enumerate(sizes)]
+    total = sum(sizes)
+    plan = create_virtual_batches(ranges, batch, seed=seed,
+                                  drop_remainder=False)
+    covered = []
+    for vb in plan.batches:
+        # segments partition this batch's positions exactly
+        positions = np.concatenate([s.batch_positions for s in vb.traversal])
+        assert sorted(positions.tolist()) == list(range(vb.size))
+        # ... and map those positions back to the batch's global ids
+        gids_via_segs = set()
+        for seg in vb.traversal:
+            gids_via_segs.update(vb.global_ids[seg.batch_positions].tolist())
+        assert gids_via_segs == set(vb.global_ids.tolist())
+        covered.extend(vb.global_ids.tolist())
+    # exactly-once coverage of every global index across all batches
+    assert sorted(covered) == list(range(total))
+    # tail batch present iff batch doesn't divide N
+    assert len(plan.batches) == -(-total // batch)
+
+    # seed determinism: same seed -> identical plan, field by field
+    plan2 = create_virtual_batches(ranges, batch, seed=seed,
+                                   drop_remainder=False)
+    assert np.array_equal(plan.global_to_node, plan2.global_to_node)
+    assert np.array_equal(plan.global_to_local, plan2.global_to_local)
+    for vb, vb2 in zip(plan.batches, plan2.batches):
+        assert np.array_equal(vb.global_ids, vb2.global_ids)
+        assert len(vb.traversal) == len(vb2.traversal)
+        for s, s2 in zip(vb.traversal, vb2.traversal):
+            assert s.node_id == s2.node_id
+            assert np.array_equal(s.local_indices, s2.local_indices)
+            assert np.array_equal(s.batch_positions, s2.batch_positions)
+
+
+def test_single_sample_nodes_and_ragged_tail():
+    """Deterministic pin of the awkward corner: several 1-sample nodes and a
+    batch size that divides nothing."""
+    ranges = [IndexRange(0, 1), IndexRange(1, 1), IndexRange(2, 5),
+              IndexRange(3, 1)]
+    plan = create_virtual_batches(ranges, 3, seed=2, drop_remainder=False)
+    assert len(plan.batches) == 3                    # 8 samples, batches of 3
+    assert [vb.size for vb in plan.batches] == [3, 3, 2]
+    covered = np.concatenate([vb.global_ids for vb in plan.batches])
+    assert sorted(covered.tolist()) == list(range(8))
