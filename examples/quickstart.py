@@ -4,19 +4,28 @@ Four nodes hold private shards; the orchestrator trains a classifier over
 them WITHOUT seeing raw data, and the result matches centralized training
 exactly (the paper's losslessness claim).
 
+This drives the protocol simulator through the unified training engine
+(``repro.launch.engine.Engine`` in ``mode="sim"``) — the same driver API
+that runs the sharded pjit path in ``launch/train.py``; ``pipeline=True``
+would route epochs through the double-buffered visit-producer /
+BP-consumer engine instead of the serial loop (identical parameters either
+way).
+
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import numpy as np
-
 import dataclasses
 
+import numpy as np
+
 from repro.configs.paper_models import DATRET
-from repro.core import TLNode, TLOrchestrator, Transport
+from repro.core import Transport
 from repro.core.baselines import ShardData, evaluate, train_cl
 from repro.data.datasets import shard_noniid, tabular
+from repro.launch.engine import Engine
 from repro.models.small import SmallModel
 from repro.optim import sgd
+
+import jax
 
 
 def main():
@@ -24,21 +33,20 @@ def main():
     ds = tabular(n=1200, d=32, n_classes=4, seed=0, margin=2.0, noise=0.8)
     train, test = ds.split(0.8)
     shards = shard_noniid(train, n_nodes=4, alpha=0.3, seed=1)
-    model = SmallModel(dataclasses.replace(DATRET, n_classes=ds.n_classes))
+    cfg = dataclasses.replace(DATRET, n_classes=ds.n_classes)
+    model = SmallModel(cfg)
 
     # --- Traversal Learning: FP on nodes, BP on the orchestrator ---------
     transport = Transport()
-    nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
-    orch = TLOrchestrator(model, nodes, sgd(0.05), transport,
-                          batch_size=32, seed=0)
-    orch.initialize(jax.random.PRNGKey(0))
-    for epoch in range(4):
-        stats = orch.train_epoch()
+    engine = Engine(model, cfg, sgd(0.05), mode="sim", pipeline=False,
+                    batch_size=32, seed=0, transport=transport)
+    result = engine.run(shards, epochs=4)
+    for epoch, stats in enumerate(result.epoch_stats):
         print(f"epoch {epoch}: loss {np.mean([s.loss for s in stats]):.4f} "
               f"acc {np.mean([s.acc for s in stats]):.3f} "
               f"eq12-consistency {max(s.grad_consistency for s in stats):.2e}")
 
-    acc_tl = evaluate(model, orch.params, test.x, test.y)["acc"]
+    acc_tl = evaluate(model, result.params, test.x, test.y)["acc"]
 
     # --- centralized reference (privacy-violating upper bound) -----------
     sdata = [ShardData(jax.numpy.asarray(s.x), jax.numpy.asarray(s.y))

@@ -1,26 +1,28 @@
 """End-to-end driver: train a ~100M-parameter LM with the production TL step.
 
-The model is a scaled-down llama-family config (deepseek-7b family), the
-data pipeline is Algorithm 1's virtual-batch loader over 8 node shards, and
-the train step is the pjit TL step (remat-from-X^(1), node-axis gradient
-aggregation) — the same code path the 512-chip dry-run lowers.
+A thin shim over ``repro.launch.engine.Engine``: the model is a scaled-down
+llama-family config (deepseek-7b family), the data pipeline is Algorithm 1's
+virtual-batch loader over 8 node shards, and the engine drives the pjit TL
+step (remat-from-X^(1), node-axis gradient aggregation, ``train_shardings``
++ donation, 2-deep host->device batch prefetch) — the same code path the
+512-chip dry-run lowers and ``launch/train.py`` serves from the CLI.
 
     PYTHONPATH=src python examples/train_tl_100m.py            # ~100M, 200 steps
     PYTHONPATH=src python examples/train_tl_100m.py --tiny     # CI-sized
 """
 import argparse
 import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
-from repro.core.tl_step import make_train_step
+from repro.configs.base import InputShape
 from repro.data.pipeline import (VirtualBatchLoader, shard_corpus,
                                  synthetic_corpus)
+from repro.launch.engine import Engine
+from repro.launch.mesh import resolve_mesh
 from repro.models import build_model
 from repro.optim import adamw, warmup_cosine
 
@@ -39,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--mesh", default="debug",
+                    choices=["debug", "host", "production"])
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    default=True)
     ap.add_argument("--ckpt", default="/tmp/tl_100m_ckpt")
     args = ap.parse_args(argv)
 
@@ -46,32 +52,27 @@ def main(argv=None):
     if args.tiny:
         args.steps = min(args.steps, 20)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    n = sum(p.size for p in jax.tree.leaves(params))
-    print(f"model {cfg.name}: {n/1e6:.1f}M params, "
-          f"{args.nodes} nodes, batch {args.batch}, seq {args.seq}")
-
+    mesh = resolve_mesh(args.mesh)
+    shape = InputShape("train_100m", args.seq, args.batch, "train")
     opt = adamw(warmup_cosine(3e-4, 20, args.steps), clip_norm=1.0)
-    opt_state = opt.init(params)
-    step_fn = jax.jit(make_train_step(model, cfg, opt, remat_mode="tl"))
+
+    engine = Engine(model, cfg, opt, mesh, shape,
+                    pipeline=args.pipeline, log_every=10)
+    engine.init(jax.random.PRNGKey(0))
+    print(f"model {cfg.name}: {engine.n_params()/1e6:.1f}M params, "
+          f"{args.nodes} nodes, batch {args.batch}, seq {args.seq}, "
+          f"mesh {args.mesh}{mesh.devices.shape}")
 
     docs = synthetic_corpus(args.nodes * 128, args.seq, cfg.vocab_size, seed=1)
     shards = shard_corpus(docs, args.nodes)
     loader = VirtualBatchLoader(shards, args.batch, seed=0)
 
-    losses, t0 = [], time.time()
-    for step, batch in enumerate(loader):
-        if step >= args.steps:
-            break
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        params, opt_state, loss = step_fn(params, opt_state, batch)
-        losses.append(float(loss))
-        if step % 10 == 0:
-            tok_s = args.batch * args.seq * (step + 1) / (time.time() - t0)
-            print(f"step {step:4d}  loss {losses[-1]:7.4f}  {tok_s:7.0f} tok/s")
-    print(f"loss: {np.mean(losses[:10]):.4f} -> {np.mean(losses[-10:]):.4f}")
-    save_checkpoint(args.ckpt, args.steps, {"params": params})
+    result = engine.run(loader, steps=args.steps)
+    losses = result.losses
+    tok_s = args.batch * args.seq * result.steps / result.wall_s
+    print(f"loss: {np.mean(losses[:10]):.4f} -> {np.mean(losses[-10:]):.4f}"
+          f"  ({result.steps_per_s:.2f} steps/s, {tok_s:.0f} tok/s)")
+    save_checkpoint(args.ckpt, args.steps, {"params": result.params})
     print("checkpoint saved to", args.ckpt)
     assert np.mean(losses[-10:]) < np.mean(losses[:10]), "loss did not improve"
 

@@ -1,3 +1,8 @@
-from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.engine import Engine, EngineResult
+from repro.launch.mesh import (make_debug_mesh, make_host_mesh,
+                               make_multipod_debug_mesh,
+                               make_production_mesh, resolve_mesh)
 
-__all__ = ["make_production_mesh", "make_debug_mesh"]
+__all__ = ["Engine", "EngineResult", "make_production_mesh",
+           "make_debug_mesh", "make_host_mesh", "make_multipod_debug_mesh",
+           "resolve_mesh"]

@@ -1,0 +1,333 @@
+"""Unified TL training engine: one driver for all three execution modes.
+
+Before this module the repo ran a TL step three disjoint ways:
+
+* **simulator serial** — ``TLOrchestrator.train_batch``: the protocol
+  simulator's per-virtual-batch round (node visits -> centralized BP);
+* **simulator pipelined** — ``repro.core.pipeline``: the double-buffered
+  visit-producer / BP-consumer epoch engine over the same orchestrator;
+* **production jit** — ``launch/train.py``'s bare ``jax.jit`` loop with no
+  mesh, no shardings, no donation, and a host sync every step.
+
+``Engine`` unifies them behind one API::
+
+    Engine(model, cfg, opt, mesh, shape).run(loader, steps)
+
+**Production mode** (``mode="production"``, the default) drives the pjit TL
+step (``repro.core.tl_step``) the way the 512-chip dry-run lowers it:
+
+* the step is jitted once with :func:`train_shardings` in/out shardings on
+  the given mesh and the params/opt_state buffers donated — identical on
+  the (1,1)/(2,2) debug meshes, the forced-8-device CPU host mesh, and the
+  multi-pod (pod, data, model) production mesh;
+* ``pipeline=True`` ports the simulator's producer/consumer split to the
+  device path: while step k's update runs, a background producer thread
+  already assembles virtual batch k+1 from the loader and
+  ``jax.device_put``\\ s its node-major shards with the ``tokens_pspec``
+  NamedSharding — a 2-deep host->device prefetch queue (the double buffer:
+  the batch being consumed plus the batch in flight), bounded by a slot
+  semaphore so at most ``PREFETCH_DEPTH`` batches ever materialize ahead.
+  ``pipeline=False`` reproduces the historical
+  strictly batch-serial driver (dispatch, wait for the step, only then
+  touch the loader) as the equivalence oracle and benchmark baseline;
+* losses stay device-resident for the whole run; the host materializes a
+  value only at ``log_every`` boundaries and at the end, so logging never
+  blocks the prefetch queue.
+
+**Simulator mode** (``mode="sim"``) wraps ``TLOrchestrator`` and routes
+``pipeline=True`` through ``repro.core.pipeline`` — the engine is then a
+thin facade so quickstart-style scripts and the production driver share one
+entrypoint.
+
+Equivalence guarantees (enforced by ``tests/test_engine.py``):
+
+* production ``pipeline=True`` and ``pipeline=False`` run the *same* jitted
+  step over the *same* batches in the same order — prefetch moves only
+  host/transfer timing, so final params match to float32 ULP (in practice
+  bit-for-bit) on every mesh;
+* simulator ``pipeline=True`` is the lossless reordering proven by
+  ``tests/test_pipelined_equivalence.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.tl_step import make_train_step, train_shardings
+from repro.dist.sharding import tokens_pspec
+
+
+@dataclass
+class EngineResult:
+    """What one ``Engine.run`` produced.  ``losses`` is host-materialized
+    exactly once, at the end of the run."""
+    losses: np.ndarray
+    steps: int
+    wall_s: float
+    params: Any
+    opt_state: Any = None
+    stats: Optional[List] = None          # sim mode: flat StepStats list
+    epoch_stats: Optional[List[List]] = None
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.steps / self.wall_s if self.wall_s else float("inf")
+
+
+class Engine:
+    """Unified TL training driver (see module docstring).
+
+    Production-mode knobs: ``pipeline`` (2-deep device prefetch vs strictly
+    batch-serial), ``remat_mode``, ``donate``, ``log_every``.
+
+    Sim-mode knobs (forwarded to ``TLOrchestrator``): ``batch_size``,
+    ``transport``, ``fused``, ``cache_model_per_epoch``, ``seed``; the
+    shared ``pipeline`` flag selects the double-buffered epoch engine.
+    """
+
+    PREFETCH_DEPTH = 2          # double buffer: consumed batch + in-flight
+
+    def __init__(self, model, cfg: ModelConfig, opt, mesh=None,
+                 shape: Optional[InputShape] = None, *,
+                 mode: str = "production", pipeline: bool = True,
+                 remat_mode: str = "tl", donate: bool = True,
+                 microbatch: int = 1, log_every: int = 0,
+                 batch_size: int = 64, transport=None, fused: bool = True,
+                 cache_model_per_epoch: bool = False, seed: int = 0):
+        if mode not in ("production", "sim"):
+            raise ValueError(f"unknown engine mode: {mode!r}")
+        if mode == "production" and (mesh is None or shape is None):
+            raise ValueError("production mode needs a mesh and an InputShape")
+        self.model = model
+        self.cfg = cfg
+        self.opt = opt
+        self.mesh = mesh
+        self.shape = shape
+        self.mode = mode
+        self.pipeline = pipeline
+        self.remat_mode = remat_mode
+        self.donate = donate
+        self.microbatch = microbatch
+        self.log_every = log_every
+        # sim-mode state
+        self.batch_size = batch_size
+        self.transport = transport
+        self.fused = fused
+        self.cache_model_per_epoch = cache_model_per_epoch
+        self.seed = seed
+        self.orchestrator = None
+        # production-mode state
+        self.params = None
+        self.opt_state = None
+        self._step_fn = None
+        self._batch_shardings = None
+
+    # ------------------------------------------------------------ lifecycle
+    def init(self, key) -> "Engine":
+        """Initialize params (+ optimizer state in production mode)."""
+        self.params = self.model.init(key)
+        if self.mode == "production":
+            self.opt_state = self.opt.init(self.params)
+        self._initialized = True
+        return self
+
+    def n_params(self) -> int:
+        assert self.params is not None, "call init(key) first"
+        return sum(p.size for p in jax.tree.leaves(self.params))
+
+    # ------------------------------------------------- production: jit once
+    def _build_step(self):
+        """jit the TL step with train_shardings in/out + donated state."""
+        if self._step_fn is not None:
+            return self._step_fn
+        cfg, mesh, shape = self.cfg, self.mesh, self.shape
+        step = make_train_step(self.model, cfg, self.opt,
+                               remat_mode=self.remat_mode,
+                               microbatch=self.microbatch)
+        with mesh:
+            in_sh, out_sh = train_shardings(
+                self.params, self.opt_state, cfg, mesh, shape,
+                with_embeds=bool(cfg.frontend))
+        donate = (0, 1) if self.donate else ()
+        self._step_fn = jax.jit(step, in_shardings=in_sh,
+                                out_shardings=out_sh, donate_argnums=donate)
+        tok = tokens_pspec(mesh, shape.global_batch)
+        sh = {"tokens": NamedSharding(mesh, tok),
+              "targets": NamedSharding(mesh, tok)}
+        if cfg.frontend:
+            sh["embeds"] = NamedSharding(mesh, P(tok[0], None, None))
+        self._batch_shardings = sh
+        return self._step_fn
+
+    def _put_batch(self, host_batch):
+        """host batch -> node-major device shards under tokens_pspec."""
+        cfg, sh = self.cfg, self._batch_shardings
+        out = {k: jax.device_put(np.asarray(v), sh[k])
+               for k, v in host_batch.items()}
+        if cfg.frontend and "embeds" not in out:
+            B = out["tokens"].shape[0]
+            out["embeds"] = jax.device_put(
+                jnp.zeros((B, cfg.frontend_tokens, cfg.d_model)),
+                sh["embeds"])
+        return out
+
+    def _device_batches(self, host_batches: Iterable):
+        """The producer half: a 2-deep host->device prefetch queue.
+
+        A background producer thread assembles batch k+1 from the loader and
+        ``device_put``\\ s its shards while the main thread drives step k —
+        so the ingest+transfer cost rides in the shadow of device compute
+        even on backends whose chained dispatch is effectively synchronous
+        (XLA:CPU).  ``PREFETCH_DEPTH`` slots bound the batches materialized
+        ahead of the consumer (the double buffer: the batch being consumed
+        plus the batch being prefetched) — the producer blocks on the slot
+        semaphore *before* assembling, so memory stays bounded.  Order is a
+        FIFO queue and every batch flows through the same jitted step, so
+        the arithmetic is exactly the serial path's.
+        """
+        import queue
+        import threading
+
+        q: queue.Queue = queue.Queue()
+        slots = threading.Semaphore(self.PREFETCH_DEPTH)
+        stop = threading.Event()
+
+        def produce():
+            try:
+                for hb in host_batches:
+                    slots.acquire()
+                    if stop.is_set():       # consumer died: don't keep
+                        return              # materializing device batches
+                    q.put(("item", self._put_batch(hb)))
+                q.put(("done", None))
+            except BaseException as e:  # noqa: BLE001 — re-raised by consumer
+                q.put(("error", e))
+
+        threading.Thread(target=produce, daemon=True,
+                         name="tl-engine-prefetch").start()
+        try:
+            while True:
+                kind, val = q.get()
+                if kind == "done":
+                    return
+                if kind == "error":
+                    raise val
+                yield val
+                slots.release()
+        finally:
+            # consumer abandoned mid-run (step raised, generator closed):
+            # wake a slot-parked producer so the thread exits instead of
+            # leaking with up to PREFETCH_DEPTH device batches pinned
+            stop.set()
+            slots.release()
+
+    def _run_production(self, loader, steps: int) -> EngineResult:
+        if self.params is None:
+            if getattr(self, "_initialized", False):
+                # a previous run failed after handing its buffers to the
+                # donated step; silently restarting from PRNGKey(0) would
+                # discard all prior progress without a trace
+                raise RuntimeError(
+                    "engine state was lost by a failed run; call "
+                    "init(key) (or assign params/opt_state) before rerunning")
+            self.init(jax.random.PRNGKey(0))
+        step_fn = self._build_step()
+
+        def host_batches():
+            for i, hb in enumerate(loader):
+                if i >= steps:
+                    return
+                yield hb
+
+        if self.pipeline:
+            batches = self._device_batches(host_batches())
+        else:
+            # strictly batch-serial oracle: the loader is not touched while
+            # a step is in flight (the consumer blocks below)
+            batches = map(self._put_batch, host_batches())
+
+        losses = []                        # device scalars, one host sync
+        params, opt_state = self.params, self.opt_state
+        self.params = self.opt_state = None    # donated: drop stale refs
+        t0 = time.perf_counter()
+        try:
+            for k, batch in enumerate(batches):
+                params, opt_state, loss = step_fn(params, opt_state, batch)
+                losses.append(loss)
+                if not self.pipeline:
+                    jax.block_until_ready(loss)
+                if self.log_every and k % self.log_every == 0:
+                    # the only mid-run host sync, at the caller's cadence
+                    print(f"step {k:4d} loss {float(loss):.4f} "
+                          f"({time.perf_counter() - t0:.1f}s)")
+            jax.block_until_ready(params)
+        finally:
+            # on failure these may point at donated (deleted) buffers — a
+            # later use then raises loudly instead of silently restarting
+            self.params, self.opt_state = params, opt_state
+        wall = time.perf_counter() - t0
+        loss_arr = (np.asarray(jax.device_get(losses), np.float32)
+                    if losses else np.zeros((0,), np.float32))
+        return EngineResult(losses=loss_arr, steps=len(losses), wall_s=wall,
+                            params=params, opt_state=opt_state)
+
+    # ---------------------------------------------------------- sim facade
+    def _run_sim(self, shards, epochs: int) -> EngineResult:
+        from repro.core.node import TLNode
+        from repro.core.orchestrator import TLOrchestrator
+        from repro.core.transport import Transport
+
+        if self.orchestrator is None:
+            nodes = [TLNode(i, self.model, s.x, s.y, jit_visits=self.fused)
+                     for i, s in enumerate(shards)]
+            self.orchestrator = TLOrchestrator(
+                self.model, nodes, self.opt,
+                self.transport or Transport(),
+                batch_size=self.batch_size, seed=self.seed,
+                fused=self.fused, donate=False,
+                cache_model_per_epoch=self.cache_model_per_epoch,
+                pipelined=self.pipeline)
+            if self.params is not None:       # caller-provided init (eq. 13)
+                self.orchestrator.params = self.params
+                self.orchestrator.opt_state = self.opt.init(self.params)
+            else:
+                self.orchestrator.initialize(jax.random.PRNGKey(self.seed))
+        orch = self.orchestrator
+
+        epoch_stats, t0 = [], time.perf_counter()
+        for _ in range(epochs):
+            epoch_stats.append(orch.train_epoch())
+        wall = time.perf_counter() - t0
+        flat = [s for ep in epoch_stats for s in ep]
+        self.params = orch.params
+        return EngineResult(
+            losses=np.asarray([s.loss for s in flat], np.float32),
+            steps=len(flat), wall_s=wall, params=orch.params,
+            opt_state=orch.opt_state, stats=flat, epoch_stats=epoch_stats)
+
+    # ----------------------------------------------------------------- run
+    def run(self, loader, steps: Optional[int] = None, *,
+            epochs: Optional[int] = None) -> EngineResult:
+        """Drive training.
+
+        Production mode: ``loader`` yields host batch dicts (e.g. a
+        ``VirtualBatchLoader``); ``steps`` bounds the run.  Sim mode:
+        ``loader`` is a sequence of per-node shards (anything with ``.x`` /
+        ``.y``) and ``epochs`` counts orchestrator epochs.
+        """
+        if self.mode == "production":
+            if steps is None:
+                raise ValueError("production mode needs steps=")
+            if epochs is not None:
+                raise ValueError("production mode counts steps, not epochs")
+            return self._run_production(loader, steps)
+        if steps is not None:
+            raise ValueError("sim mode counts epochs, not steps")
+        return self._run_sim(loader, epochs if epochs is not None else 1)

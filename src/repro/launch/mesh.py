@@ -30,3 +30,49 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for CPU multi-device tests (host platform device count)."""
     return make_mesh_compat((n_data, n_model), ("data", "model"))
+
+
+def make_host_mesh(n_model: int = None):
+    """(data, model) mesh over every visible device.  ``n_model`` defaults to
+    2 when the device count is even (so TP paths are exercised), else 1.
+    With ``--xla_force_host_platform_device_count=8`` this is the forced-8
+    CPU mesh the engine equivalence tests run on."""
+    n = jax.device_count()
+    if n_model is None:
+        n_model = 2 if n % 2 == 0 and n >= 2 else 1
+    return make_mesh_compat((n // n_model, n_model), ("data", "model"))
+
+
+def make_multipod_debug_mesh(pod: int = 2, data: int = 2, model: int = 2):
+    """Smallest mesh carrying the full multi-pod axis set (pod, data, model);
+    runnable on 8 forced host devices.  Exercises the composite (pod, data)
+    batch axes of :func:`repro.dist.sharding.batch_axes` without 512 chips."""
+    return make_mesh_compat((pod, data, model), ("pod", "data", "model"))
+
+
+def resolve_mesh(kind: str, *, multi_pod: bool = False):
+    """CLI-facing mesh selection for the training engine.
+
+    * ``debug``      — the largest of (2,2) / (2,1) / (1,1) the host's device
+      count supports.  On a plain single-device CPU this degenerates to a
+      (1,1) mesh: the same jit path, shardings and donation as at scale,
+      with every collective a no-op.
+    * ``host``       — all visible devices as (data, model); combined with a
+      forced ``--xla_force_host_platform_device_count`` this is the CPU
+      stand-in for a real slice.
+    * ``production`` — the 16x16 pod mesh (``multi_pod=True``: 2x16x16 with
+      the (pod, data, model) axes); lower/compile-only on a laptop, the real
+      thing on the actual slice.
+    """
+    if kind == "debug":
+        n = jax.device_count()
+        if n >= 4:
+            return make_debug_mesh(2, 2)
+        if n >= 2:
+            return make_debug_mesh(2, 1)
+        return make_debug_mesh(1, 1)
+    if kind == "host":
+        return make_host_mesh()
+    if kind == "production":
+        return make_production_mesh(multi_pod=multi_pod)
+    raise ValueError(f"unknown mesh kind: {kind!r}")

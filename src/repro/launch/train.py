@@ -1,25 +1,34 @@
-"""End-to-end TL training driver (CPU-runnable at reduced scale).
+"""End-to-end TL training CLI — a thin shim over ``repro.launch.engine``.
 
     PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b --reduced \
-        --steps 50 --nodes 4 --batch 8 --seq 64
+        --steps 50 --nodes 4 --batch 8 --seq 64 --mesh debug --pipeline
 
 Wires together: synthetic corpus -> node shards -> virtual-batch loader
-(Algorithm 1) -> production TL train step (remat-from-X^(1) + node-axis
-gradient aggregation) -> optimizer -> checkpointing.
+(Algorithm 1) -> ``Engine`` -> checkpointing.  The engine owns everything
+the old driver got wrong: the step is jitted once with ``train_shardings``
+in/out shardings and donated params/opt_state on a real mesh (``--mesh
+{debug,host,production}``), batches prefetch host->device through a 2-deep
+queue while the previous step runs (``--pipeline``, default; ``--no-
+pipeline`` is the strictly batch-serial oracle), and losses stay
+device-resident until log boundaries — no per-step host sync.
+
+The three execution modes and their equivalence guarantees are documented
+in ``repro.launch.engine``; the pipelined and serial paths produce
+float32-ULP-identical parameters (``tests/test_engine.py``).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
-from repro.core.tl_step import make_train_step
+from repro.configs.base import InputShape
 from repro.data.pipeline import VirtualBatchLoader, shard_corpus, synthetic_corpus
+from repro.launch.engine import Engine
+from repro.launch.mesh import resolve_mesh
 from repro.models import build_model
 from repro.optim import adamw, warmup_cosine
 
@@ -35,44 +44,47 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--remat", default="tl", choices=["tl", "none", "dots"])
+    ap.add_argument("--mesh", default="debug",
+                    choices=["debug", "host", "production"])
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="with --mesh production: the 2x16x16 "
+                         "(pod, data, model) mesh")
+    ap.add_argument("--pipeline", action="store_true", default=True,
+                    help="2-deep host->device batch prefetch (default)")
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    help="strictly batch-serial loading (the equivalence "
+                         "oracle)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    n_params = sum(p.size for p in jax.tree.leaves(params))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M nodes={args.nodes}")
-
+    mesh = resolve_mesh(args.mesh, multi_pod=args.multi_pod)
+    shape = InputShape("cli_train", args.seq, args.batch, "train")
     opt = adamw(warmup_cosine(args.lr, 10, args.steps), clip_norm=1.0)
-    opt_state = opt.init(params)
-    step_fn = jax.jit(make_train_step(model, cfg, opt, remat_mode=args.remat))
+
+    engine = Engine(model, cfg, opt, mesh, shape,
+                    pipeline=args.pipeline, remat_mode=args.remat,
+                    log_every=args.log_every)
+    engine.init(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={engine.n_params()/1e6:.1f}M "
+          f"nodes={args.nodes} mesh={args.mesh}{mesh.devices.shape} "
+          f"pipeline={args.pipeline}")
 
     docs = synthetic_corpus(args.nodes * 64, args.seq, cfg.vocab_size, seed=1)
     shards = shard_corpus(docs, args.nodes)
     loader = VirtualBatchLoader(shards, args.batch, seed=0)
 
-    losses = []
-    t0 = time.time()
-    for step, batch in enumerate(loader):
-        if step >= args.steps:
-            break
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        if cfg.frontend:
-            batch["embeds"] = jnp.zeros(
-                (batch["tokens"].shape[0], cfg.frontend_tokens, cfg.d_model))
-        params, opt_state, loss = step_fn(params, opt_state, batch)
-        losses.append(float(loss))
-        if step % args.log_every == 0:
-            print(f"step {step:4d} loss {float(loss):.4f} "
-                  f"({time.time()-t0:.1f}s)")
+    result = engine.run(loader, steps=args.steps)
+    losses = result.losses.tolist()
     print(f"final loss {np.mean(losses[-5:]):.4f} "
-          f"(start {np.mean(losses[:5]):.4f})")
+          f"(start {np.mean(losses[:5]):.4f}) "
+          f"{result.steps_per_s:.2f} steps/s")
     if args.ckpt:
         path = save_checkpoint(args.ckpt, args.steps,
-                               {"params": params, "opt": opt_state})
+                               {"params": result.params,
+                                "opt": result.opt_state})
         print("checkpoint:", path)
     return losses
 
