@@ -196,8 +196,13 @@ _PRODUCTION_SCRIPT = textwrap.dedent("""
     # "device" shares cores with the host, so pure-CPU host work cannot
     # demonstrate overlap.  Serial loading pays ingest on the critical path
     # every step; the 2-deep prefetch queue hides it behind device compute.
-    # The step itself is kept small (1 layer, d=128) so ingest is a visible
-    # fraction of the step.
+    # The step is kept small (1 layer, d=128) so ingest is a visible
+    # fraction of the step, and this column runs on the single-device mesh:
+    # the overlap is a property of the engine's producer thread, not of the
+    # sharding, and the forced-8-device mesh's XLA thread pools oversubscribe
+    # small CPU hosts so badly that compute jitter swamps the signal (the
+    # sharded step's cost lives in the production_dryrun column above).
+    from repro.launch.mesh import make_debug_mesh
     INGEST_S = 0.02
     import dataclasses
     ecfg = dataclasses.replace(cfg, name="engine-clock", n_layers=1,
@@ -205,7 +210,8 @@ _PRODUCTION_SCRIPT = textwrap.dedent("""
                                d_ff=256, vocab_size=256)
     emodel = build_model(ecfg)
     EB, ES, STEPS = 8, 32, 32
-    eng = Engine(emodel, ecfg, adamw(3e-4, clip_norm=1.0), mesh,
+    eng = Engine(emodel, ecfg, adamw(3e-4, clip_norm=1.0),
+                 make_debug_mesh(1, 1),
                  InputShape("bench", ES, EB, "train"))
     eng.init(jax.random.PRNGKey(0))
 

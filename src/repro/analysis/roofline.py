@@ -128,7 +128,9 @@ def predict_train_collective_bytes(cfg, shape, mesh, params,
       gathered for the forward pass, and gathered again for the remat-mode
       "tl"/"dots" backward recompute of the tail;
     * ``grads``        — data-parallel gradient reduction of every leaf,
-      modeled as an all-reduce (2x leaf bytes).  XLA may legally lower some
+      modeled as an all-reduce of the per-device gradient (2x its bytes:
+      full leaf size for FSDP/replicated leaves, per-device shard size for
+      TP-only leaves).  XLA may legally lower some
       of these as reduce-scatters (~half the bytes) or CSE re-gathers, which
       is why the measured value sits *below* this bound — the contract
       (asserted in ``tests/test_engine.py``) is
@@ -152,7 +154,7 @@ def predict_train_collective_bytes(cfg, shape, mesh, params,
     n_tp = sizes.get("model", 1)
 
     pspecs = param_specs(params, cfg, mesh)
-    fsdp_bytes = repl_bytes = 0
+    fsdp_bytes = repl_bytes = tp_shard_bytes = 0
     for leaf, spec in zip(
             _jax.tree.leaves(params),
             _jax.tree.leaves(pspecs,
@@ -165,16 +167,19 @@ def predict_train_collective_bytes(cfg, shape, mesh, params,
             axes.update(entry if isinstance(entry, tuple) else (entry,))
         if axes & {"pod", "data"}:
             fsdp_bytes += nbytes
+        elif "model" in axes:
+            # TP-only leaves live (and psum their grads over the data axis)
+            # at per-device shard size
+            tp_shard_bytes += nbytes // n_tp
         else:
-            repl_bytes += nbytes                 # incl. model-only leaves:
-            # their grads still need the data-axis psum at full shard size
+            repl_bytes += nbytes
 
     weights = 0.0
     grads = 0.0
     if n_dp > 1:
         regather = 2.0 if remat_mode in ("tl", "dots") else 1.0
         weights = regather * float(fsdp_bytes)
-        grads = 2.0 * float(fsdp_bytes + repl_bytes)
+        grads = 2.0 * float(fsdp_bytes + repl_bytes + tp_shard_bytes)
 
     activations = 0.0
     if n_tp > 1:
@@ -190,6 +195,7 @@ def predict_train_collective_bytes(cfg, shape, mesh, params,
     return {"weights": weights, "grads": grads, "activations": activations,
             "total": total, "n_dp": n_dp, "n_tp": n_tp,
             "fsdp_param_bytes": float(fsdp_bytes),
+            "tp_shard_param_bytes": float(tp_shard_bytes),
             "replicated_param_bytes": float(repl_bytes)}
 
 

@@ -123,11 +123,13 @@ class Engine:
         self.cache_model_per_epoch = cache_model_per_epoch
         self.seed = seed
         self.orchestrator = None
+        self._sim_shards = None
         # production-mode state
         self.params = None
         self.opt_state = None
         self._step_fn = None
         self._batch_shardings = None
+        self._zero_embeds = None
 
     # ------------------------------------------------------------ lifecycle
     def init(self, key) -> "Engine":
@@ -163,6 +165,11 @@ class Engine:
               "targets": NamedSharding(mesh, tok)}
         if cfg.frontend:
             sh["embeds"] = NamedSharding(mesh, P(tok[0], None, None))
+            # frontend stubs are constant zeros: materialize the sharded
+            # device array once, not one host alloc + transfer per batch
+            self._zero_embeds = jax.device_put(
+                jnp.zeros((shape.global_batch, cfg.frontend_tokens,
+                           cfg.d_model)), sh["embeds"])
         self._batch_shardings = sh
         return self._step_fn
 
@@ -172,10 +179,7 @@ class Engine:
         out = {k: jax.device_put(np.asarray(v), sh[k])
                for k, v in host_batch.items()}
         if cfg.frontend and "embeds" not in out:
-            B = out["tokens"].shape[0]
-            out["embeds"] = jax.device_put(
-                jnp.zeros((B, cfg.frontend_tokens, cfg.d_model)),
-                sh["embeds"])
+            out["embeds"] = self._zero_embeds
         return out
 
     def _device_batches(self, host_batches: Iterable):
@@ -284,7 +288,16 @@ class Engine:
         from repro.core.orchestrator import TLOrchestrator
         from repro.core.transport import Transport
 
+        if self.orchestrator is not None and shards is not self._sim_shards:
+            # the cached orchestrator's TLNodes were built from the first
+            # run's shards; silently training on those while the caller
+            # hands in different data would fit the wrong dataset
+            raise ValueError(
+                "sim-mode engine is bound to the shards of its first run; "
+                "pass the same shards object to continue training, or build "
+                "a fresh Engine for a different dataset")
         if self.orchestrator is None:
+            self._sim_shards = shards
             nodes = [TLNode(i, self.model, s.x, s.y, jit_visits=self.fused)
                      for i, s in enumerate(shards)]
             self.orchestrator = TLOrchestrator(
