@@ -11,7 +11,15 @@ nodes, for
   scatter reassembly, and a single compiled (donated) vjp+update step;
 * ``pipelined`` — the fused path driven by the double-buffered epoch engine
   (``repro.core.pipeline``): batch k+1's visits produced while batch k's
-  centralized BP consumes.
+  centralized BP consumes;
+* ``reassembly`` — the fused path's virtual-batch reassembly strategy:
+  ``xla`` (one generic ``.at[perm].set`` scatter per payload tensor, the
+  fused column above) vs ``pallas`` (the fused ``repro.kernels.vb_scatter``
+  row-routing kernel — one launch, one HBM pass).  On this CPU container
+  the kernel runs in interpret mode, so the wall-clock column is a
+  correctness-under-load signal, not the TPU speedup; the HBM-byte claim
+  is asserted analytically (``predict_reassembly_hbm_bytes`` + the HLO
+  scatter accounting in ``tests/test_analysis.py``).
 
 Pipelining is a *clock* optimization in the protocol simulator, so besides
 wall-clock steps/sec the benchmark runs a simulated-time epoch (nonzero node
@@ -46,6 +54,7 @@ import subprocess
 import sys
 import textwrap
 import time
+from typing import Optional
 
 import jax
 import numpy as np
@@ -72,7 +81,8 @@ def _git_rev() -> str:
 
 
 def _build_orchestrator(n_nodes: int, *, fused: bool, pipelined: bool = False,
-                        simulate_time: bool = False):
+                        simulate_time: bool = False,
+                        reassembly: str = "xla"):
     from repro.configs.paper_models import DATRET
     from repro.core.node import TLNode
     from repro.core.orchestrator import TLOrchestrator
@@ -97,7 +107,7 @@ def _build_orchestrator(n_nodes: int, *, fused: bool, pipelined: bool = False,
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
                           batch_size=BATCH_SIZE, seed=0,
                           fused=fused, donate=fused, pipelined=pipelined,
-                          **time_kw)
+                          reassembly=reassembly, **time_kw)
     orch.initialize(jax.random.PRNGKey(0))
     return orch
 
@@ -285,12 +295,18 @@ def _load_runs(out_path: str) -> list:
     return data
 
 
-def run(node_counts=(2, 4, 8), epochs: int = 3, out_path: str = OUT_PATH,
+def run(node_counts=(2, 4, 8), epochs: int = 3,
+        out_path: Optional[str] = OUT_PATH,
         production: bool = True) -> dict:
+    """One benchmark entry.  ``out_path=None`` skips the trajectory write
+    (smoke mode: ``benchmarks/run.py`` wraps the returned entry in its
+    standard ``BENCH_<name>.json`` artifact instead)."""
     results = {}
     for n in node_counts:
         eager = _measure(_build_orchestrator(n, fused=False), epochs)
         fused = _measure(_build_orchestrator(n, fused=True), epochs)
+        pallas = _measure(_build_orchestrator(n, fused=True,
+                                              reassembly="pallas"), epochs)
         piped = _measure(_build_orchestrator(n, fused=True, pipelined=True),
                          epochs)
         clock_serial = _simulated_clock(n, pipelined=False)
@@ -300,12 +316,17 @@ def run(node_counts=(2, 4, 8), epochs: int = 3, out_path: str = OUT_PATH,
             "fused_steps_per_s": round(fused, 2),
             "pipelined_steps_per_s": round(piped, 2),
             "speedup": round(fused / eager, 2),
+            "reassembly": {
+                "xla_steps_per_s": round(fused, 2),
+                "pallas_steps_per_s": round(pallas, 2),
+            },
             "serial_clock_s": round(clock_serial, 4),
             "pipelined_clock_s": round(clock_piped, 4),
             "clock_speedup": round(clock_serial / clock_piped, 3),
         }
         print(f"bench_tl_step/nodes={n},"
               f"{1e6 / fused:.0f},speedup={fused / eager:.2f}x,"
+              f"reassembly_pallas={pallas:.2f}steps/s,"
               f"clock={clock_serial:.3f}s->{clock_piped:.3f}s")
     entry = {
         "git_rev": _git_rev(),
@@ -320,27 +341,29 @@ def run(node_counts=(2, 4, 8), epochs: int = 3, out_path: str = OUT_PATH,
     }
     if production:
         entry.update(_production_columns())
-    # one entry per git rev: a re-run at the same checkout replaces its own
-    # earlier entry instead of duplicating it (the trajectory is per-PR).
-    # Migrated legacy baselines are immune — a dirty tree sitting on the
-    # baseline's rev must not displace the baseline it is compared against.
-    runs = [r for r in _load_runs(out_path)
-            if r.get("legacy") or r.get("git_rev") != entry["git_rev"]]
-    runs.append(entry)
-    with open(out_path, "w") as f:
-        json.dump(runs, f, indent=1)
-    print(f"bench_tl_step/artifact,{out_path} ({len(runs)} runs)")
+    if out_path is not None:
+        # one entry per git rev: a re-run at the same checkout replaces its
+        # own earlier entry instead of duplicating it (the trajectory is
+        # per-PR).  Migrated legacy baselines are immune — a dirty tree
+        # sitting on the baseline's rev must not displace the baseline it
+        # is compared against.
+        runs = [r for r in _load_runs(out_path)
+                if r.get("legacy") or r.get("git_rev") != entry["git_rev"]]
+        runs.append(entry)
+        with open(out_path, "w") as f:
+            json.dump(runs, f, indent=1)
+        print(f"bench_tl_step/artifact,{out_path} ({len(runs)} runs)")
     return entry
 
 
 def main(smoke: bool = False) -> dict:
     if smoke:
         # fast per-PR regression signal: 2 nodes, one measured epoch, same
-        # JSON shape, no production subprocess — written beside (never over)
-        # the full-sweep artifact
-        return run(node_counts=(2,), epochs=1,
-                   out_path=os.path.join(REPO_ROOT,
-                                         "BENCH_tl_step_smoke.json"),
+        # entry shape, no production subprocess.  The smoke artifact is
+        # written by benchmarks/run.py's standard wrapper
+        # (BENCH_tl_step_smoke.json), not by this module — the trajectory
+        # file stays full-sweep-only.
+        return run(node_counts=(2,), epochs=1, out_path=None,
                    production=False)
     return run()
 

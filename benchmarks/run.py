@@ -35,25 +35,25 @@ def main() -> None:
                             table1_quality, table2_runtime)
     failures = []
     entries = [
-        ("table2_runtime", table2_runtime.main, False),
-        ("fig3_scaling", fig3_scaling.main, False),
-        ("roofline_report", roofline_report.main, False),
-        # writes its own BENCH_tl_step_smoke.json — no wrapper artifact on
-        # success, so the file keeps one shape however it's produced
-        ("tl_step_smoke", lambda: bench_tl_step.main(smoke=True), True),
-        ("table1_quality", table1_quality.main, False),
+        ("table2_runtime", table2_runtime.main),
+        ("fig3_scaling", fig3_scaling.main),
+        ("roofline_report", roofline_report.main),
+        # smoke entry flows through the standard wrapper artifact
+        # (BENCH_tl_step_smoke.json) like every other benchmark; only the
+        # full sweep appends to the BENCH_tl_step.json trajectory
+        ("tl_step_smoke", lambda: bench_tl_step.main(smoke=True)),
+        ("table1_quality", table1_quality.main),
     ]
-    for name, fn, writes_own in entries:
+    for name, fn in entries:
         t = time.time()
         try:
             result = fn()
             dt = time.time() - t
-            if not writes_own:
-                art = {"benchmark": name, "status": "ok",
-                       "seconds": round(dt, 3)}
-                if isinstance(result, dict):
-                    art["result"] = result
-                _write_artifact(name, art)
+            art = {"benchmark": name, "status": "ok",
+                   "seconds": round(dt, 3)}
+            if isinstance(result, dict):
+                art["result"] = result
+            _write_artifact(name, art)
             print(f"{name}/total,{dt * 1e6:.0f},ok")
         except Exception as e:  # noqa: BLE001
             dt = time.time() - t

@@ -10,7 +10,11 @@ counts (extracted from the loop-condition constants), and accumulates:
   * hbm_bytes   — operand+result bytes at fusion boundaries (the XLA
                   bytes-accessed convention),
   * coll        — per-collective-type bytes, result-shape sized
-                  (all-reduce ×2 for the reduce+broadcast halves).
+                  (all-reduce ×2 for the reduce+broadcast halves),
+  * scatter     — result bytes materialized through generic scatter ops
+                  (op, fusion root, or a backend scatter-expander while
+                  loop identified by op_name metadata; the TL reassembly
+                  assertion).
 
 All values describe the per-device SPMD program.
 """
@@ -190,6 +194,27 @@ def _trip_count(cond: Computation, comps) -> int:
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# a generic scatter that the backend expanded into a loop (XLA:CPU's
+# scatter expander) keeps the originating jaxpr primitive in its op_name
+# metadata: ".../scatter" (also scatter-add etc.); the leading boundary
+# keeps "reduce_scatter" collectives out
+_SCATTER_META_RE = re.compile(
+    r'op_name="(?:[^"]*/)?scatter(?:[-_][a-z]+)?(?:\[|")')
+
+
+def _max_tensor_bytes(shape_str: str) -> int:
+    """Largest single tensor in an HLO shape string — for a scatter-expander
+    while loop this is the scattered result buffer, not the loop carries."""
+    best = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
 _HBM_OPS = {"fusion", "dot", "convolution", "custom-call", "scatter",
             "gather", "sort", "reduce", "dynamic-slice",
             "dynamic-update-slice", "copy", "transpose", "broadcast",
@@ -202,16 +227,25 @@ class Costs:
     flops: float = 0.0
     hbm_bytes: float = 0.0
     coll: Dict[str, float] = field(default_factory=dict)
+    # generic-scatter accounting: how much result data the module
+    # materializes through XLA scatter ops (op or fusion root).  The TL
+    # reassembly optimization is asserted on exactly this: the Pallas
+    # vb_scatter path must drive scatter_bytes on the fused step to zero.
+    scatter_bytes: float = 0.0
+    n_scatter: float = 0.0
 
     def scaled(self, k: float) -> "Costs":
         return Costs(self.flops * k, self.hbm_bytes * k,
-                     {t: v * k for t, v in self.coll.items()})
+                     {t: v * k for t, v in self.coll.items()},
+                     self.scatter_bytes * k, self.n_scatter * k)
 
     def add(self, other: "Costs"):
         self.flops += other.flops
         self.hbm_bytes += other.hbm_bytes
         for t, v in other.coll.items():
             self.coll[t] = self.coll.get(t, 0.0) + v
+        self.scatter_bytes += other.scatter_bytes
+        self.n_scatter += other.n_scatter
 
     @property
     def coll_total(self) -> float:
@@ -309,6 +343,14 @@ def analyze(text: str) -> Costs:
                 for key in ("calls", "to_apply"):
                     if key in attrs:
                         out.add(cost_of(attrs[key]))
+
+            root = op
+            if op == "fusion" and "calls" in attrs:
+                root = _fusion_root_op(attrs["calls"], comps)
+            if root == "scatter" or (op == "while"
+                                     and _SCATTER_META_RE.search(ins.rest)):
+                out.n_scatter += 1
+                out.scatter_bytes += _max_tensor_bytes(ins.shape)
 
             is_coll = any(op.startswith(c) for c in _COLLECTIVES) \
                 and not op.endswith("-done")

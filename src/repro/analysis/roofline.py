@@ -199,6 +199,38 @@ def predict_train_collective_bytes(cfg, shape, mesh, params,
             "replicated_param_bytes": float(repl_bytes)}
 
 
+def predict_reassembly_hbm_bytes(x1_bytes: float, dl_bytes: float = 0.0,
+                                 dx1_bytes: float = 0.0, *,
+                                 strategy: str = "xla") -> Dict[str, float]:
+    """Roofline prediction of the virtual-batch reassembly's HBM *write*
+    traffic per fused step, by strategy.
+
+    Convention (matches ``hlo_flops``'s scatter accounting): each payload
+    tensor's reassembled buffer costs
+
+    * ``"xla"``    — 2× its bytes: XLA's generic ``.at[perm].set`` lowering
+      first materializes the zero-initialized destination and then updates
+      every row, so the reassembled X^(1) is written twice even though the
+      permutation covers every destination row;
+    * ``"pallas"`` — 1× its bytes: the ``vb_scatter`` kernel streams each
+      destination row exactly once (no zeros materialization).
+
+    Reads of the concatenated payloads (1× per tensor) are identical across
+    strategies and excluded.  The dropped 1× of X^(1) is the "materialized
+    once, not twice" contract asserted on the compiled fused step by the
+    scatter accounting in ``tests/test_analysis.py``.
+    """
+    if strategy not in ("xla", "pallas"):
+        raise ValueError(f"unknown reassembly strategy: {strategy!r}")
+    mult = 2.0 if strategy == "xla" else 1.0
+    tensors = {"x1": float(x1_bytes), "delta_L": float(dl_bytes),
+               "dx1": float(dx1_bytes)}
+    out = {k: mult * v for k, v in tensors.items()}
+    out["write_multiplier"] = mult
+    out["total"] = sum(mult * v for v in tensors.values())
+    return out
+
+
 def model_flops(cfg, shape) -> float:
     """MODEL_FLOPS = 6·N(_active)·tokens for training; 2·N for one forward
     token-pass (prefill), 2·N per generated token for decode."""

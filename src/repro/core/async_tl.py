@@ -141,9 +141,15 @@ def async_train_epoch(orch, *, min_contributions: Optional[int] = None,
             # stay pruned end to end up to this point.
             if getattr(orch, "fused", False):
                 # the orchestrator's cached jitted per-contribution step
-                # (compile-once, shared across batches/epochs)
+                # (compile-once, shared across batches/epochs).  The step
+                # reassembles the contribution's rows by their rank within
+                # the segment's virtual-batch positions — the fused step's
+                # reassembly restricted to one segment, under the
+                # orchestrator's configured strategy (xla / pallas).
+                ranks = np.argsort(np.argsort(seg.batch_positions))
                 grads = orch._get_contrib_step()(
-                    orch.params, wire["x1"], wire["delta_L"], wire["gw1"])
+                    orch.params, wire["x1"], wire["delta_L"], wire["gw1"],
+                    jnp.asarray(ranks.astype(np.int32)))
             else:
                 from repro.core.node import add_first_layer_grads
                 _, pull = jax.vjp(

@@ -15,12 +15,17 @@ paper's "ensuring consistency with the recalculated forward pass".
 Two execution paths produce the *same* update:
 
 * fused (default) — one jitted centralized-BP step per virtual batch:
-  the per-node payloads are concatenated and reassembled with a single
-  batched scatter over the concatenated ``batch_positions``, the tail
-  vjp + eq. 12 consistency check + optimizer update run as one compiled
-  function (cached across virtual batches; ``donate=True`` additionally
-  donates params/opt_state buffers), and loss/accuracy stay device-resident
-  so the host syncs once per epoch;
+  the per-node payloads are concatenated and reassembled over the
+  concatenated ``batch_positions``, the tail vjp + eq. 12 consistency
+  check + optimizer update run as one compiled function (cached across
+  virtual batches; ``donate=True`` additionally donates params/opt_state
+  buffers), and loss/accuracy stay device-resident so the host syncs once
+  per epoch.  ``reassembly`` selects how the batch is put back together:
+  ``"xla"`` keeps one generic ``.at[perm].set`` scatter per payload tensor
+  (zeros-init + row updates — two HBM writes of each reassembled tensor);
+  ``"pallas"`` routes all three payloads through the fused
+  ``repro.kernels.vb_scatter`` row-gather kernel — one launch, one HBM
+  pass, no zeros materialization (same values bit-for-bit);
 * eager (``fused=False``) — the op-by-op reference path with per-node
   scatters and an un-jitted vjp, kept as the lossless oracle and the
   benchmark baseline.
@@ -70,7 +75,7 @@ class TLOrchestrator:
                  check_consistency: bool = True,
                  cache_model_per_epoch: bool = False,
                  fused: bool = True, donate: bool = False,
-                 pipelined: bool = False):
+                 pipelined: bool = False, reassembly: str = "xla"):
         self.model = model
         self.nodes = list(nodes)
         self.opt = optimizer
@@ -98,6 +103,12 @@ class TLOrchestrator:
                              "donated parameter buffers across batches")
         self.fused = fused
         self.donate = donate
+        # reassembly: how the fused/contrib steps put the virtual batch back
+        # in global order — "xla" (generic scatter) or "pallas" (the fused
+        # vb_scatter kernel); numerically identical, see module docstring
+        if reassembly not in ("xla", "pallas"):
+            raise ValueError(f"unknown reassembly strategy: {reassembly!r}")
+        self.reassembly = reassembly
         # pipelined: route train_epoch through the double-buffered epoch
         # engine (repro.core.pipeline) — batch k+1's visits are produced
         # while batch k's centralized BP consumes; a pure reordering of the
@@ -193,57 +204,101 @@ class TLOrchestrator:
         return {i: flat[i] for i in leaf_indices}
 
     # --------------------------------------------------- fused (jitted) path
-    def _get_fused_step(self):
-        if self._fused_step is None:
-            model, opt = self.model, self.opt
-            check = self.check_consistency
+    def _build_fused_step(self, reassemble: str):
+        model, opt = self.model, self.opt
+        check = self.check_consistency
 
-            def step(params, opt_state, x1_cat, dL_cat, dx1_cat, perm, gw1s):
-                # reassemble the virtual batch in global shuffled order with
-                # ONE batched scatter per tensor (positions partition 0..N-1)
+        def step(params, opt_state, x1_cat, dL_cat, dx1_cat, perm, gw1s):
+            # reassemble the virtual batch in global shuffled order
+            # (positions partition 0..N-1): one generic scatter per tensor
+            # ("xla") or all three payloads in one fused kernel pass
+            # ("pallas" — repro.kernels.vb_scatter)
+            if reassemble == "pallas":
+                from repro.kernels.vb_scatter import scatter_rows, vb_scatter
+                if check:
+                    x1, dL, dx1_nodes = vb_scatter(x1_cat, dL_cat, dx1_cat,
+                                                   perm)
+                else:
+                    # dx1 is only consumed by the eq. 12 check; keep the
+                    # dead payload out of the fused pass (XLA cannot DCE
+                    # one output of the kernel call)
+                    x1, dL = scatter_rows(perm, (x1_cat, dL_cat))
+                    dx1_nodes = None
+            else:
                 x1 = jnp.zeros_like(x1_cat).at[perm].set(x1_cat)
                 dL = jnp.zeros_like(dL_cat).at[perm].set(dL_cat)
-                # centralized BP: recompute activations from X^(1) (eq. 4–5),
-                # backprop from aggregated δ^(L) (eq. 6–11)
-                _, pull = jax.vjp(
-                    lambda p, h: model.tail_layers(p, h), params, x1)
-                g_tail, dx1_orch = pull(dL)
-                acc: Dict[int, jax.Array] = {}
-                for g in gw1s:
-                    for i, leaf in g.items():
-                        acc[i] = leaf if i not in acc else acc[i] + leaf
-                grads = add_first_layer_grads(g_tail, acc)
-                if check:                                          # eq. 12
-                    dx1_nodes = jnp.zeros_like(dx1_cat).at[perm].set(dx1_cat)
-                    cons = jnp.max(jnp.abs(dx1_orch - dx1_nodes))
-                else:
-                    cons = jnp.full((), jnp.nan, jnp.float32)
-                # parameter update (eq. 13–14)
-                params, opt_state = opt.update(params, grads, opt_state)
-                return params, opt_state, cons
+                dx1_nodes = (jnp.zeros_like(dx1_cat).at[perm].set(dx1_cat)
+                             if check else None)
+            # centralized BP: recompute activations from X^(1) (eq. 4–5),
+            # backprop from aggregated δ^(L) (eq. 6–11)
+            _, pull = jax.vjp(
+                lambda p, h: model.tail_layers(p, h), params, x1)
+            g_tail, dx1_orch = pull(dL)
+            acc: Dict[int, jax.Array] = {}
+            for g in gw1s:
+                for i, leaf in g.items():
+                    acc[i] = leaf if i not in acc else acc[i] + leaf
+            grads = add_first_layer_grads(g_tail, acc)
+            if check:                                          # eq. 12
+                cons = jnp.max(jnp.abs(dx1_orch - dx1_nodes))
+            else:
+                cons = jnp.full((), jnp.nan, jnp.float32)
+            # parameter update (eq. 13–14)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return params, opt_state, cons
 
-            donate = (0, 1) if self.donate else ()
-            self._fused_step = jax.jit(step, donate_argnums=donate)
+        donate = (0, 1) if self.donate else ()
+        return jax.jit(step, donate_argnums=donate)
+
+    def _get_fused_step(self, reassemble: Optional[str] = None):
+        """Cached jitted centralized-BP step.  ``reassemble`` overrides the
+        orchestrator's configured strategy ("xla" | "pallas"); the
+        orchestrator's own strategy is compile-once cached, an explicit
+        override builds a fresh step (strategy experiments/benchmarks)."""
+        strategy = self.reassembly if reassemble is None else reassemble
+        if strategy != self.reassembly:
+            return self._build_fused_step(strategy)
+        if self._fused_step is None:
+            self._fused_step = self._build_fused_step(strategy)
         return self._fused_step
 
-    def _get_contrib_step(self):
+    def _build_contrib_step(self, reassemble: str):
+        model = self.model
+
+        def contrib(params, x1, delta_L, gw1, perm):
+            # a single contribution's reassembly: order its rows by their
+            # virtual-batch positions (``perm`` = within-segment position
+            # ranks) — the fused step's reassembly restricted to one
+            # segment, through the same strategy.  The tail vjp is row-wise
+            # up to the weight-gradient reduction, so this changes the
+            # gradient only by summation reassociation (float32 ULPs).
+            if reassemble == "pallas":
+                from repro.kernels.vb_scatter import scatter_rows
+                x1, delta_L = scatter_rows(perm, (x1, delta_L))
+            else:
+                x1 = jnp.zeros_like(x1).at[perm].set(x1)
+                delta_L = jnp.zeros_like(delta_L).at[perm].set(delta_L)
+            _, pull = jax.vjp(
+                lambda p, h: model.tail_layers(p, h), params, x1)
+            g_tail, _ = pull(delta_L)
+            return add_first_layer_grads(g_tail, gw1)
+
+        return jax.jit(contrib)
+
+    def _get_contrib_step(self, reassemble: Optional[str] = None):
         """Cached jitted *per-contribution* centralized BP (async TL §3.4):
         tail vjp from one node's payload plus its pruned first-layer leaf
         grads → a full gradient tree, no optimizer.  Shares the fused path's
-        compile-once discipline; ``async_tl`` routes every buffered
+        compile-once discipline (and its ``reassemble`` strategy — see
+        :meth:`_get_fused_step`); ``async_tl`` routes every buffered
         contribution through this instead of an eager ``jax.vjp``.
         Recompiles once per distinct segment length (payloads arrive
         unpadded), which the jit cache absorbs across epochs."""
+        strategy = self.reassembly if reassemble is None else reassemble
+        if strategy != self.reassembly:
+            return self._build_contrib_step(strategy)
         if self._contrib_step is None:
-            model = self.model
-
-            def contrib(params, x1, delta_L, gw1):
-                _, pull = jax.vjp(
-                    lambda p, h: model.tail_layers(p, h), params, x1)
-                g_tail, _ = pull(delta_L)
-                return add_first_layer_grads(g_tail, gw1)
-
-            self._contrib_step = jax.jit(contrib)
+            self._contrib_step = self._build_contrib_step(strategy)
         return self._contrib_step
 
     def _train_batch_fused(self, vb, results, order) -> StepStats:

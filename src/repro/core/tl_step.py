@@ -19,6 +19,21 @@ The TPU-native realization of Traversal Learning (DESIGN.md §2):
   "none"     — beyond-paper baseline: save everything (memory-bound);
   "per_layer"— beyond-paper middle ground: scan-level remat, save each
                cycle's inputs (the usual production policy).
+
+``reassembly`` puts the orchestrator's virtual-batch reassembly on the
+production hot path: the loader hands batches node-major (traversal order),
+and the centralized phase reassembles X^(1) — and every row-aligned
+consumer (targets, MTP tokens, masks) — into shuffled batch order before
+the recompute-from-X^(1) BP, exactly the protocol simulator's
+``.at[perm].set`` step.  ``"xla"`` uses the generic scatter lowering,
+``"pallas"`` the fused ``repro.kernels.vb_scatter`` row-gather kernel
+(bit-identical values, one HBM pass, differentiable through the TL loss via
+its custom vjp), ``"none"`` skips reassembly (the historical driver).  The
+scatter sits behind a ``shard_map`` boundary over the (pod, data) batch
+axes: the batch dict's ``perm`` is *shard-local* (each shard's block of
+``B/n_dp`` rows holds a permutation of ``0..B/n_dp``, the ranks of that
+shard's rows' global batch positions — see ``launch.engine``), so
+reassembly adds zero collective traffic at any node count.
 """
 from __future__ import annotations
 
@@ -33,21 +48,71 @@ from repro.configs.base import InputShape, ModelConfig
 from repro.dist.sharding import (batch_axes, param_specs, tokens_pspec,
                                  cache_pspec)
 from repro.models import transformer
-from repro.models.model import MTP_WEIGHT, Model, cross_entropy
+from repro.models.model import (MTP_WEIGHT, Model, cross_entropy,
+                                mtp_shift_targets)
+
+
+# ------------------------------------------------------------- reassembly
+
+def _make_row_permuter(mesh: Optional[Mesh], strategy: str) -> Callable:
+    """Row reassembly ``out[perm[i]] = t[i]`` over batch-leading tensors.
+
+    ``strategy`` selects the lowering ("xla" generic scatter vs "pallas"
+    fused vb_scatter kernel).  With a mesh whose (pod, data) axes shard the
+    batch, the permutation runs inside a ``shard_map`` over those axes —
+    each shard scatters its own rows by its shard-local perm, so the
+    reassembly never crosses a chip boundary.  Batches the data axes don't
+    divide fall back to a global (replicated) permute, mirroring
+    ``tokens_pspec``'s sharding decision for the batch itself.
+    """
+    def permute(perm, *tensors):
+        if strategy == "pallas":
+            from repro.kernels.vb_scatter import scatter_rows
+            return scatter_rows(perm, tensors)
+        return tuple(jnp.zeros_like(t).at[perm].set(t) for t in tensors)
+
+    dp = batch_axes(mesh) if mesh is not None else ()
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if n_dp <= 1:
+        return permute
+
+    from jax.experimental.shard_map import shard_map
+
+    def sharded(perm, *tensors):
+        B = perm.shape[0]
+        if B % n_dp != 0 or B < n_dp:
+            return permute(perm, *tensors)
+        specs = tuple(P(dp, *([None] * (t.ndim - 1))) for t in tensors)
+        return shard_map(permute, mesh=mesh, in_specs=(P(dp),) + specs,
+                         out_specs=specs, check_rep=False)(perm, *tensors)
+
+    return sharded
 
 
 # ------------------------------------------------------------------ TL loss
 
-def tl_loss_fn(model: Model, cfg: ModelConfig, remat_mode: str = "tl"):
+def tl_loss_fn(model: Model, cfg: ModelConfig, remat_mode: str = "tl",
+               reassembly: str = "none", mesh: Optional[Mesh] = None):
     """Loss whose autodiff graph *is* the TL protocol."""
     F = cfg.frontend_tokens if (cfg.frontend and not cfg.is_encdec) else 0
+    if reassembly not in ("none", "xla", "pallas"):
+        raise ValueError(f"unknown reassembly strategy: {reassembly!r}")
 
     if cfg.is_encdec:
+        if reassembly != "none":
+            raise ValueError("reassembly applies to the decoder-LM TL "
+                             "split; enc-dec losses take the model.loss "
+                             "path")
         # TL boundary for enc-dec: decoder block 0.  The encoder runs in the
         # node phase (it consumes node-local frontend embeddings).
         def loss(params, batch):
             return model.loss(params, batch)[0]
         return loss
+
+    permute_rows = (_make_row_permuter(mesh, reassembly)
+                    if reassembly != "none" else None)
 
     def tail_fn(params, h1, tokens):
         logits, h, aux = transformer.tail(params, cfg, h1, return_hidden=True)
@@ -68,20 +133,34 @@ def tl_loss_fn(model: Model, cfg: ModelConfig, remat_mode: str = "tl"):
 
     def loss(params, batch):
         tokens, targets = batch["tokens"], batch["targets"]
+        mask = batch.get("mask")
         extra = batch.get("embeds")
         # ---- node phase: first-layer activations X^(1)
         h0 = transformer.embed_tokens(params, cfg, tokens, extra)
         h1, aux0 = transformer.block0(params, cfg, h0)
+        if permute_rows is not None:
+            # ---- centralized-phase prologue: reassemble the node-major
+            # virtual batch into shuffled batch order (shard-local perms,
+            # see module docstring) — X^(1) plus every row-aligned consumer
+            rows = {"h1": h1, "targets": targets}
+            if cfg.mtp_depth:
+                rows["tokens"] = tokens
+            if mask is not None:
+                rows["mask"] = mask
+            rows = dict(zip(rows, permute_rows(batch["perm"],
+                                               *rows.values())))
+            h1, targets = rows["h1"], rows["targets"]
+            tokens = rows.get("tokens", tokens)
+            mask = rows.get("mask", mask)
         # ---- orchestrator phase: recompute-from-X^(1) BP
         logits, h_final, aux = tail_exec(params, h1, tokens)
         logits_txt = logits[:, F:] if F else logits
-        ce = cross_entropy(logits_txt, targets, batch.get("mask"))
+        ce = cross_entropy(logits_txt, targets, mask)
         total = ce + aux + aux0
         if cfg.mtp_depth:
             h_txt = h_final[:, F:] if F else h_final
             mtp = transformer.mtp_logits(params, cfg, tokens, h_txt)
-            t2 = jnp.roll(targets, -1, axis=1)
-            valid = jnp.ones_like(t2).at[:, -2:].set(0)
+            t2, valid = mtp_shift_targets(targets)
             total = total + MTP_WEIGHT * cross_entropy(mtp, t2, valid)
         return total
 
@@ -91,7 +170,9 @@ def tl_loss_fn(model: Model, cfg: ModelConfig, remat_mode: str = "tl"):
 # ------------------------------------------------------------- train step
 
 def make_train_step(model: Model, cfg: ModelConfig, optimizer, *,
-                    remat_mode: str = "tl", microbatch: int = 1) -> Callable:
+                    remat_mode: str = "tl", microbatch: int = 1,
+                    reassembly: str = "none",
+                    mesh: Optional[Mesh] = None) -> Callable:
     """(params, opt_state, batch) -> (params, opt_state, loss).
 
     jit/lower with in_shardings from :func:`train_shardings`; GSPMD then
@@ -101,8 +182,17 @@ def make_train_step(model: Model, cfg: ModelConfig, optimizer, *,
     micro-batches with gradient accumulation (beyond-paper: the update stays
     bit-identical to the full-batch TL update — mean of micro-grads — while
     activation peak memory drops ~microbatch×).
+
+    ``reassembly`` ("none" | "xla" | "pallas") reassembles the virtual
+    batch inside the loss (module docstring); the batch dict then carries a
+    shard-local ``perm``.  ``mesh`` places the shard_map boundary.
     """
-    loss_fn = tl_loss_fn(model, cfg, remat_mode)
+    if reassembly != "none" and microbatch > 1:
+        # the perm is defined over the full virtual batch; gradient
+        # accumulation slices the batch before reassembly is well-defined
+        raise ValueError("reassembly requires microbatch == 1")
+    loss_fn = tl_loss_fn(model, cfg, remat_mode, reassembly=reassembly,
+                         mesh=mesh)
 
     if microbatch <= 1:
         def step(params, opt_state, batch):
@@ -135,8 +225,13 @@ def make_train_step(model: Model, cfg: ModelConfig, optimizer, *,
 
 
 def train_shardings(params, opt_state, cfg: ModelConfig, mesh: Mesh,
-                    shape: InputShape, *, with_embeds: bool = False):
-    """(in_shardings, out_shardings) pytrees for make_train_step's step."""
+                    shape: InputShape, *, with_embeds: bool = False,
+                    with_perm: bool = False):
+    """(in_shardings, out_shardings) pytrees for make_train_step's step.
+
+    ``with_perm=True`` adds the reassembly permutation's spec: ``perm``
+    shards with the batch rows (``tokens_pspec``'s batch entry) so each
+    shard holds exactly the local perm for its own rows."""
     pspecs = param_specs(params, cfg, mesh)
 
     # optimizer slots mirror their parameter's sharding rule (paths align
@@ -154,6 +249,8 @@ def train_shardings(params, opt_state, cfg: ModelConfig, mesh: Mesh,
     batch_specs = {"tokens": tok_spec, "targets": tok_spec}
     if with_embeds:
         batch_specs["embeds"] = P(tok_spec[0], None, None)
+    if with_perm:
+        batch_specs["perm"] = P(tok_spec[0])
     named = lambda tree: jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree,
         is_leaf=lambda x: isinstance(x, P))

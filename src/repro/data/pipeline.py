@@ -73,10 +73,15 @@ class VirtualBatchLoader:
         while self.epochs is None or epoch < self.epochs:
             plan = self.plan(epoch)
             for vb in plan.batches:
-                rows = []
+                rows, pos = [], []
                 for seg in vb.traversal:
                     rows.append(self.shards[seg.node_id].docs[seg.local_indices])
+                    pos.append(seg.batch_positions)
                 data = np.concatenate(rows, axis=0)
+                # positions: each node-major row's global (shuffled) batch
+                # position — consumed by the engine's reassembly path,
+                # dropped otherwise (never device-transferred as-is)
                 yield {"tokens": data[:, :-1].astype(np.int32),
-                       "targets": data[:, 1:].astype(np.int32)}
+                       "targets": data[:, 1:].astype(np.int32),
+                       "positions": np.concatenate(pos).astype(np.int32)}
             epoch += 1

@@ -32,8 +32,10 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
                   * s_ref[...][:, None]).astype(x_ref.dtype)
 
 
-def quantize_rows(x, *, block_rows: int = 128, interpret: bool = True):
+def quantize_rows(x, *, block_rows: int = 128, interpret=None):
     """x: (R, D) -> (int8 (R, D), scales f32 (R,)). R % block_rows == 0."""
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     R, D = x.shape
     assert R % block_rows == 0
     grid = (R // block_rows,)
@@ -54,8 +56,10 @@ def quantize_rows(x, *, block_rows: int = 128, interpret: bool = True):
 
 
 def dequantize_rows(q, scales, *, out_dtype=jnp.float32,
-                    block_rows: int = 128, interpret: bool = True):
+                    block_rows: int = 128, interpret=None):
     """Inverse of :func:`quantize_rows`."""
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     R, D = q.shape
     assert R % block_rows == 0
     grid = (R // block_rows,)

@@ -4,12 +4,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.act_compress.kernel import dequantize_rows, quantize_rows
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def compress(x, *, block_rows: int = 128, interpret: bool = True):
-    """x: (..., D) -> dict(q int8, scale f32, shape).  Rows padded to block."""
+def _compress(x, *, block_rows: int, interpret: bool):
     shape = x.shape
     flat = x.reshape(-1, shape[-1])
     R = flat.shape[0]
@@ -20,10 +20,18 @@ def compress(x, *, block_rows: int = 128, interpret: bool = True):
     return {"q": q[:R], "scale": s[:R]}
 
 
+def compress(x, *, block_rows: int = 128, interpret=None):
+    """x: (..., D) -> dict(q int8, scale f32, shape).  Rows padded to block.
+    ``interpret`` resolves via ``REPRO_PALLAS_INTERPRET`` (see
+    ``repro.kernels.resolve_interpret``)."""
+    return _compress(x, block_rows=block_rows,
+                     interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("shape", "block_rows", "interpret",
                                              "out_dtype"))
-def decompress(payload, shape, *, out_dtype=jnp.float32, block_rows: int = 128,
-               interpret: bool = True):
+def _decompress(payload, shape, *, out_dtype, block_rows: int,
+                interpret: bool):
     q, s = payload["q"], payload["scale"]
     R = q.shape[0]
     pad = (-R) % block_rows
@@ -33,6 +41,14 @@ def decompress(payload, shape, *, out_dtype=jnp.float32, block_rows: int = 128,
     x = dequantize_rows(q, s, out_dtype=out_dtype, block_rows=block_rows,
                         interpret=interpret)
     return x[:R].reshape(shape)
+
+
+def decompress(payload, shape, *, out_dtype=jnp.float32, block_rows: int = 128,
+               interpret=None):
+    """Inverse of :func:`compress` (same interpret-mode resolution)."""
+    return _decompress(payload, shape, out_dtype=out_dtype,
+                       block_rows=block_rows,
+                       interpret=resolve_interpret(interpret))
 
 
 def compressed_bytes(payload) -> int:

@@ -75,11 +75,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_bh(q, k, v, *, scale: float, causal: bool = True,
                        window: int = 0, q_offset: int = 0,
                        block_q: int = 128, block_k: int = 128,
-                       interpret: bool = True):
+                       interpret=None):
     """q: (BH, Sq, D); k, v: (BH, Sk, D) — batch*heads pre-flattened.
 
     Sq/Sk must be divisible by block sizes (the wrapper pads).
     """
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     BH, Sq, D = q.shape
     Sk = k.shape[1]
     grid = (BH, Sq // block_q, Sk // block_k)

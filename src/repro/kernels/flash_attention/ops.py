@@ -5,6 +5,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_bh
 
 
@@ -19,15 +20,8 @@ def _pad_to(x, axis, mult):
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
-    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0.
-
-    Returns (B, Sq, H, D).  Pads sequence dims to the block size; padded KV
-    positions sit *after* the valid ones and are masked out by the causal
-    check as long as Sq == Sk (self-attention), which is the supported case.
-    """
+def _flash_attention(q, k, v, *, causal: bool, window: int, block_q: int,
+                     block_k: int, interpret: bool):
     B, Sq, H, D = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     assert H % KV == 0
@@ -47,3 +41,18 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                              interpret=interpret)
     out = out[:, :Sq].reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
     return out
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128, interpret=None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0.
+
+    Returns (B, Sq, H, D).  Pads sequence dims to the block size; padded KV
+    positions sit *after* the valid ones and are masked out by the causal
+    check as long as Sq == Sk (self-attention), which is the supported case.
+    ``interpret`` resolves through ``repro.kernels.resolve_interpret``
+    (``REPRO_PALLAS_INTERPRET``) before the jit boundary.
+    """
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=resolve_interpret(interpret))

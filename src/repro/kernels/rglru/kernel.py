@@ -44,8 +44,10 @@ def _rglru_kernel(a_ref, b_ref, h_ref, h_final_ref, state_scr, *, chunk: int):
         h_final_ref[0] = h.astype(h_final_ref.dtype)
 
 
-def rglru_scan_b(a, b, *, chunk: int = 64, interpret: bool = True):
+def rglru_scan_b(a, b, *, chunk: int = 64, interpret=None):
     """a, b: (B, S, W) with a ∈ (0,1).  Returns h (B,S,W), h_final (B,W)."""
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, S, W = a.shape
     assert S % chunk == 0
     grid = (B, S // chunk)

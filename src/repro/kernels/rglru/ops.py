@@ -4,12 +4,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.rglru.kernel import rglru_scan_b
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rglru_scan(a, b, *, chunk: int = 64, interpret: bool = True):
-    """a, b: (B, S, W).  Pads S to the chunk size and strips the pad."""
+def _rglru_scan(a, b, *, chunk: int, interpret: bool):
     B, S, W = a.shape
     pad = (-S) % chunk
     if pad:
@@ -17,3 +17,11 @@ def rglru_scan(a, b, *, chunk: int = 64, interpret: bool = True):
         b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
     h, hT = rglru_scan_b(a, b, chunk=chunk, interpret=interpret)
     return h[:, :S], hT
+
+
+def rglru_scan(a, b, *, chunk: int = 64, interpret=None):
+    """a, b: (B, S, W).  Pads S to the chunk size and strips the pad.
+    ``interpret`` resolves via ``REPRO_PALLAS_INTERPRET`` (see
+    ``repro.kernels.resolve_interpret``)."""
+    return _rglru_scan(a, b, chunk=chunk,
+                       interpret=resolve_interpret(interpret))

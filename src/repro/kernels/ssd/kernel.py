@@ -70,13 +70,15 @@ def _ssd_kernel(dA_ref, x_ref, b_ref, c_ref, y_ref, hT_ref, h_scr, *,
         hT_ref[0] = h_scr[...].astype(hT_ref.dtype)
 
 
-def ssd_bh(dA, x, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
+def ssd_bh(dA, x, Bm, Cm, *, chunk: int = 256, interpret=None):
     """Flattened (batch*heads)-major SSD scan.
 
     dA: (BH, S) log-decay per step; x: (BH, S, P) dt-scaled inputs;
     Bm, Cm: (BH, S, N).  S must divide by ``chunk``.
     Returns y (BH, S, P) and final state (BH, P, N).
     """
+    from repro.kernels import resolve_interpret
+    interpret = resolve_interpret(interpret)
     BH, S, P = x.shape
     N = Bm.shape[-1]
     assert S % chunk == 0

@@ -4,16 +4,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import resolve_interpret
 from repro.kernels.ssd.kernel import ssd_bh
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x, dt, A_log, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
-    """Model layout: x (B,S,H,P), dt (B,S,H), A_log (H,), Bm/Cm (B,S,N).
-
-    Returns y (B,S,H,P) and final state (B,H,P,N).  B/C are shared across
-    heads (Mamba-2 ngroups=1) and broadcast here.
-    """
+def _ssd(x, dt, A_log, Bm, Cm, *, chunk: int, interpret: bool):
     B, S, H, P = x.shape
     N = Bm.shape[-1]
     A = -jnp.exp(A_log.astype(jnp.float32))
@@ -25,3 +21,14 @@ def ssd(x, dt, A_log, Bm, Cm, *, chunk: int = 256, interpret: bool = True):
     y, hT = ssd_bh(dA, xf, Bf, Cf, chunk=chunk, interpret=interpret)
     y = y.reshape(B, H, S, P).transpose(0, 2, 1, 3).astype(x.dtype)
     return y, hT.reshape(B, H, P, N)
+
+
+def ssd(x, dt, A_log, Bm, Cm, *, chunk: int = 256, interpret=None):
+    """Model layout: x (B,S,H,P), dt (B,S,H), A_log (H,), Bm/Cm (B,S,N).
+
+    Returns y (B,S,H,P) and final state (B,H,P,N).  B/C are shared across
+    heads (Mamba-2 ngroups=1) and broadcast here.  ``interpret`` resolves
+    via ``REPRO_PALLAS_INTERPRET`` (``repro.kernels.resolve_interpret``).
+    """
+    return _ssd(x, dt, A_log, Bm, Cm, chunk=chunk,
+                interpret=resolve_interpret(interpret))

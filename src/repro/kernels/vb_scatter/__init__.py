@@ -1,0 +1,6 @@
+from repro.kernels.vb_scatter.kernel import permute_rows, take_rows
+from repro.kernels.vb_scatter.ops import scatter_rows, vb_scatter
+from repro.kernels.vb_scatter.ref import scatter_rows_ref, vb_scatter_ref
+
+__all__ = ["permute_rows", "take_rows", "scatter_rows", "vb_scatter",
+           "scatter_rows_ref", "vb_scatter_ref"]

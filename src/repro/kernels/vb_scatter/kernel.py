@@ -1,0 +1,106 @@
+"""Virtual-batch reassembly Pallas TPU kernel (the eq. 4–5 prologue).
+
+The TL orchestrator reassembles the virtual batch from concatenated node
+payloads: ``out[perm[i]] = payload[i]`` where ``perm`` is the concatenated
+``batch_positions`` (a permutation of ``0..N-1``).  XLA lowers each
+``zeros_like(x).at[perm].set(x)`` to a *generic* scatter: it materializes
+the zero-initialized destination buffer and then updates every row — two
+full HBM writes of the reassembled X^(1) per tensor, issued once per
+payload tensor (x1, δ^(L), ∂L/∂X^(1)), before the tail vjp reads X^(1)
+back.  Because ``perm`` is a permutation, the zeros are dead: every
+destination row is written exactly once.
+
+This kernel streams each row exactly once instead.  ``perm`` is
+scalar-prefetched (``PrefetchScalarGridSpec``) so BlockSpec index maps can
+depend on it; the grid is ``(N, n_col_blocks)`` and grid step ``(i, j)``
+DMAs row ``i`` column-block ``j`` of every payload straight to its
+destination row — no zeros materialization, no full-batch VMEM residency,
+no scatter or sort ops in the lowering.  Two row routings share one body:
+
+* ``scatter``: read row ``i``, write row ``perm[i]`` (the reassembly);
+* ``gather``:  read row ``idx[i]``, write row ``i`` (the reassembly's
+  transpose — the custom-vjp backward gathers cotangents with the *same*
+  ``perm``, no inverse permutation ever materializes).
+
+All payload tensors ride the same grid as a multi-ref call, so the whole
+reassembly is one kernel launch and one HBM pass over the payloads.
+
+Tiling (v5e): blocks are ``(1, BLOCK_COLS)`` — VMEM holds
+``n_refs × 2 (in+out) × 2 (double-buffer) × BLOCK_COLS × 4 B`` ≈ 0.5 MB at
+the default 8192 columns, far under the 16 MB/core budget.  A tensor
+narrower than the widest ref collapses to fewer column blocks; its index
+map clamps ``j`` so the extra grid steps rewrite the last block
+idempotently (only hit when refs of very different widths share a call —
+the (N, C) δ^(L) next to a wide (N, D) X^(1)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import resolve_interpret
+
+BLOCK_COLS = 8192
+
+
+def _copy_rows_kernel(idx_ref, *refs):
+    # refs = (in_0..in_{n-1}, out_0..out_{n-1}); the row routing lives
+    # entirely in the BlockSpec index maps, so the body is a plain copy
+    del idx_ref
+    n = len(refs) // 2
+    for in_ref, out_ref in zip(refs[:n], refs[n:]):
+        out_ref[...] = in_ref[...]
+
+
+def permute_rows(idx, *tensors, mode: str = "scatter",
+                 block_cols: int = BLOCK_COLS, interpret=None):
+    """Route rows of every (N, D_t) tensor by ``idx`` in one fused pass.
+
+    ``mode="scatter"``: ``out_t[idx[i]] = t[i]`` (``idx`` must be a
+    permutation of ``0..N-1`` — each destination row is written exactly
+    once).  ``mode="gather"``: ``out_t[i] = t[idx[i]]``.  The two modes are
+    transposes of each other under the same ``idx``, which is exactly the
+    scatter-by-permutation vjp pair.  Dtypes are per-ref (f32/bf16
+    activations and int32 token rows mix freely).
+    """
+    interpret = resolve_interpret(interpret)
+    n_rows = tensors[0].shape[0]
+    n_blocks = [-(-t.shape[1] // block_cols) for t in tensors]
+    grid_cols = max(n_blocks)
+
+    routed = lambda i, idx_ref: idx_ref[i]
+    direct = lambda i, idx_ref: i
+    in_row, out_row = ((direct, routed) if mode == "scatter"
+                       else (routed, direct))
+
+    def specs(row_of):
+        out = []
+        for t, nb in zip(tensors, n_blocks):
+            width = min(t.shape[1], block_cols)
+
+            def index_map(i, j, idx_ref, nb=nb, row_of=row_of):
+                return row_of(i, idx_ref), jnp.minimum(j, nb - 1)
+
+            out.append(pl.BlockSpec((1, width), index_map))
+        return out
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_rows, grid_cols),
+        in_specs=specs(in_row),
+        out_specs=specs(out_row),
+    )
+    return pl.pallas_call(
+        _copy_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in tensors],
+        interpret=interpret,
+    )(idx, *tensors)
+
+
+def take_rows(idx, *tensors, block_cols: int = BLOCK_COLS, interpret=None):
+    """``out_t[i] = t[idx[i]]`` — :func:`permute_rows` in gather mode."""
+    return permute_rows(idx, *tensors, mode="gather", block_cols=block_cols,
+                        interpret=interpret)

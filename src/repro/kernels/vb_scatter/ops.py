@@ -1,0 +1,82 @@
+"""Jit'd public wrappers: differentiable virtual-batch reassembly.
+
+``scatter_rows(perm, tensors)`` places row ``i`` of every tensor at row
+``perm[i]`` of its output in one fused Pallas pass (see ``kernel.py``),
+wrapped in a ``jax.custom_vjp`` whose backward is the inverse gather
+``d_in[i] = d_out[perm[i]]`` — the exact transpose of a
+scatter-by-permutation.  The production TL loss differentiates *through*
+the reassembly of X^(1), and the custom rule keeps that backward on the
+same single-pass kernel instead of falling back to XLA's generic
+scatter/gather lowering.
+
+``vb_scatter(x1, dL, dx1, perm)`` is the orchestrator-payload spelling:
+the centralized-BP step's three reassembly scatters as one kernel launch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.kernels import resolve_interpret
+from repro.kernels.vb_scatter.kernel import permute_rows, take_rows
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _scatter_flat(interpret: bool, perm, flats):
+    # the kernel scatters by the prefetched perm directly (write row
+    # perm[i], read row i) — no inverse permutation, no argsort, and no
+    # scatter op anywhere in the compiled step
+    return tuple(permute_rows(perm, *flats, mode="scatter",
+                              interpret=interpret))
+
+
+def _scatter_flat_fwd(interpret, perm, flats):
+    return _scatter_flat(interpret, perm, flats), perm
+
+
+def _scatter_flat_bwd(interpret, perm, g):
+    # transpose of scatter-by-permutation: gather, d_in[i] = d_out[perm[i]].
+    # Integer rows (tokens/targets riding the same fused pass) have float0
+    # cotangents — pass them through untouched, gather only the float ones.
+    float_pos = [k for k, gk in enumerate(g)
+                 if gk.dtype != jax.dtypes.float0]
+    gathered = iter(take_rows(perm, *(g[k] for k in float_pos),
+                              interpret=interpret) if float_pos else ())
+    d_flats = tuple(next(gathered) if k in float_pos else g[k]
+                    for k in range(len(g)))
+    return np.zeros(perm.shape, dtype=jax.dtypes.float0), d_flats
+
+
+_scatter_flat.defvjp(_scatter_flat_fwd, _scatter_flat_bwd)
+
+
+def scatter_rows(perm, tensors, *, interpret=None):
+    """``out_t[perm[i]] = t[i]`` for every (N, ...) tensor, one HBM pass.
+
+    ``perm``: int32 (N,) permutation of ``0..N-1`` (the virtual batch's
+    concatenated ``batch_positions``).  Tensors may have any trailing shape
+    and mixed dtypes; each is flattened to rows for the kernel and restored.
+    Differentiable: the custom vjp gathers cotangent rows back by ``perm``.
+    """
+    tensors = tuple(tensors)
+    flats = tuple(t.reshape(t.shape[0], -1) for t in tensors)
+    outs = _scatter_flat(resolve_interpret(interpret), perm, flats)
+    return tuple(o.reshape(t.shape) for o, t in zip(outs, tensors))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _vb_scatter(x1_cat, dL_cat, dx1_cat, perm, *, interpret: bool):
+    return scatter_rows(perm, (x1_cat, dL_cat, dx1_cat), interpret=interpret)
+
+
+def vb_scatter(x1_cat, dL_cat, dx1_cat, perm, *, interpret=None):
+    """Reassemble the TL virtual batch in global shuffled order.
+
+    One fused kernel for the centralized-BP prologue: scatters the
+    concatenated node payloads X^(1), δ^(L), ∂L/∂X^(1) by ``perm`` in a
+    single pass.  Returns ``(x1, delta_L, dx1)`` in batch order.
+    """
+    return _vb_scatter(x1_cat, dL_cat, dx1_cat, perm,
+                       interpret=resolve_interpret(interpret))

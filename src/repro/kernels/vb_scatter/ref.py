@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for virtual-batch reassembly (the seed's scatter path)."""
+import jax.numpy as jnp
+
+
+def scatter_rows_ref(perm, tensors):
+    """``out_t[perm[i]] = t[i]`` via XLA's generic ``.at[].set`` scatter."""
+    return tuple(jnp.zeros_like(t).at[perm].set(t) for t in tensors)
+
+
+def vb_scatter_ref(x1_cat, dL_cat, dx1_cat, perm):
+    return scatter_rows_ref(perm, (x1_cat, dL_cat, dx1_cat))

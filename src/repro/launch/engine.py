@@ -32,7 +32,14 @@ step (``repro.core.tl_step``) the way the 512-chip dry-run lowers it:
   touch the loader) as the equivalence oracle and benchmark baseline;
 * losses stay device-resident for the whole run; the host materializes a
   value only at ``log_every`` boundaries and at the end, so logging never
-  blocks the prefetch queue.
+  blocks the prefetch queue;
+* ``reassembly`` ("none" | "xla" | "pallas") puts the orchestrator's
+  virtual-batch reassembly on the pjit hot path (``repro.core.tl_step``):
+  the loader's ``positions`` (global batch positions of the node-major
+  rows) are converted — per data shard — into shard-local rank perms, so
+  the in-loss scatter runs under a ``shard_map`` over the (pod, data) axes
+  with zero collective traffic; ``"pallas"`` lowers it through the fused
+  ``repro.kernels.vb_scatter`` kernel instead of XLA's generic scatter.
 
 **Simulator mode** (``mode="sim"``) wraps ``TLOrchestrator`` and routes
 ``pipeline=True`` through ``repro.core.pipeline`` — the engine is then a
@@ -85,11 +92,14 @@ class Engine:
     """Unified TL training driver (see module docstring).
 
     Production-mode knobs: ``pipeline`` (2-deep device prefetch vs strictly
-    batch-serial), ``remat_mode``, ``donate``, ``log_every``.
+    batch-serial), ``remat_mode``, ``donate``, ``log_every``,
+    ``reassembly`` ("none" | "xla" | "pallas" — in-loss virtual-batch
+    reassembly with shard-local perms).
 
     Sim-mode knobs (forwarded to ``TLOrchestrator``): ``batch_size``,
     ``transport``, ``fused``, ``cache_model_per_epoch``, ``seed``; the
-    shared ``pipeline`` flag selects the double-buffered epoch engine.
+    shared ``pipeline`` flag selects the double-buffered epoch engine and
+    ``reassembly`` the orchestrator's scatter strategy.
     """
 
     PREFETCH_DEPTH = 2          # double buffer: consumed batch + in-flight
@@ -99,12 +109,15 @@ class Engine:
                  mode: str = "production", pipeline: bool = True,
                  remat_mode: str = "tl", donate: bool = True,
                  microbatch: int = 1, log_every: int = 0,
+                 reassembly: str = "none",
                  batch_size: int = 64, transport=None, fused: bool = True,
                  cache_model_per_epoch: bool = False, seed: int = 0):
         if mode not in ("production", "sim"):
             raise ValueError(f"unknown engine mode: {mode!r}")
         if mode == "production" and (mesh is None or shape is None):
             raise ValueError("production mode needs a mesh and an InputShape")
+        if reassembly not in ("none", "xla", "pallas"):
+            raise ValueError(f"unknown reassembly strategy: {reassembly!r}")
         self.model = model
         self.cfg = cfg
         self.opt = opt
@@ -116,6 +129,11 @@ class Engine:
         self.donate = donate
         self.microbatch = microbatch
         self.log_every = log_every
+        # reassembly: "none" | "xla" | "pallas" — production mode scatters
+        # the virtual batch into shuffled order inside the loss (see module
+        # docstring); sim mode forwards the strategy to TLOrchestrator
+        # ("none" keeps the orchestrator's default xla scatter)
+        self.reassembly = reassembly
         # sim-mode state
         self.batch_size = batch_size
         self.transport = transport
@@ -130,6 +148,7 @@ class Engine:
         self._step_fn = None
         self._batch_shardings = None
         self._zero_embeds = None
+        self._n_perm_shards = 1
 
     # ------------------------------------------------------------ lifecycle
     def init(self, key) -> "Engine":
@@ -150,19 +169,30 @@ class Engine:
         if self._step_fn is not None:
             return self._step_fn
         cfg, mesh, shape = self.cfg, self.mesh, self.shape
+        reassemble = self.reassembly != "none"
         step = make_train_step(self.model, cfg, self.opt,
                                remat_mode=self.remat_mode,
-                               microbatch=self.microbatch)
+                               microbatch=self.microbatch,
+                               reassembly=self.reassembly, mesh=mesh)
         with mesh:
             in_sh, out_sh = train_shardings(
                 self.params, self.opt_state, cfg, mesh, shape,
-                with_embeds=bool(cfg.frontend))
+                with_embeds=bool(cfg.frontend), with_perm=reassemble)
         donate = (0, 1) if self.donate else ()
         self._step_fn = jax.jit(step, in_shardings=in_sh,
                                 out_shardings=out_sh, donate_argnums=donate)
         tok = tokens_pspec(mesh, shape.global_batch)
         sh = {"tokens": NamedSharding(mesh, tok),
               "targets": NamedSharding(mesh, tok)}
+        if reassemble:
+            sh["perm"] = NamedSharding(mesh, P(tok[0]))
+            # perms must be local to each of the n_dp batch shards (a
+            # permutation of the shard's own row block) so the shard_map'd
+            # scatter in the loss never crosses a chip boundary
+            self._n_perm_shards = 1
+            if tok[0] is not None:
+                for a in (tok[0] if isinstance(tok[0], tuple) else (tok[0],)):
+                    self._n_perm_shards *= mesh.shape[a]
         if cfg.frontend:
             sh["embeds"] = NamedSharding(mesh, P(tok[0], None, None))
             # frontend stubs are constant zeros: materialize the sharded
@@ -173,9 +203,33 @@ class Engine:
         self._batch_shardings = sh
         return self._step_fn
 
+    def _local_perm(self, positions):
+        """Global batch positions -> shard-local rank perm.
+
+        Block j (one data shard's rows) gets the ranks of its rows' global
+        positions: scattering by them orders each shard's slice by global
+        batch position — the orchestrator's reassembly restricted to the
+        shard, with no cross-shard movement."""
+        pos = np.asarray(positions)
+        blocks = pos.reshape(self._n_perm_shards, -1)
+        return np.argsort(np.argsort(blocks, axis=1),
+                          axis=1).reshape(-1).astype(np.int32)
+
     def _put_batch(self, host_batch):
         """host batch -> node-major device shards under tokens_pspec."""
         cfg, sh = self.cfg, self._batch_shardings
+        host_batch = dict(host_batch)
+        # the loader's global row positions only matter when reassembling;
+        # they become the shard-local perm (and never ship to the device
+        # themselves)
+        positions = host_batch.pop("positions", None)
+        if self.reassembly != "none":
+            if positions is None:
+                raise ValueError(
+                    "reassembly needs the loader to emit 'positions' "
+                    "(global batch positions of the node-major rows); "
+                    "VirtualBatchLoader does so by default")
+            host_batch["perm"] = self._local_perm(positions)
         out = {k: jax.device_put(np.asarray(v), sh[k])
                for k, v in host_batch.items()}
         if cfg.frontend and "embeds" not in out:
@@ -306,7 +360,9 @@ class Engine:
                 batch_size=self.batch_size, seed=self.seed,
                 fused=self.fused, donate=False,
                 cache_model_per_epoch=self.cache_model_per_epoch,
-                pipelined=self.pipeline)
+                pipelined=self.pipeline,
+                reassembly=("xla" if self.reassembly == "none"
+                            else self.reassembly))
             if self.params is not None:       # caller-provided init (eq. 13)
                 self.orchestrator.params = self.params
                 self.orchestrator.opt_state = self.opt.init(self.params)

@@ -9,8 +9,11 @@ the old driver got wrong: the step is jitted once with ``train_shardings``
 in/out shardings and donated params/opt_state on a real mesh (``--mesh
 {debug,host,production}``), batches prefetch host->device through a 2-deep
 queue while the previous step runs (``--pipeline``, default; ``--no-
-pipeline`` is the strictly batch-serial oracle), and losses stay
-device-resident until log boundaries — no per-step host sync.
+pipeline`` is the strictly batch-serial oracle), losses stay
+device-resident until log boundaries — no per-step host sync — and the
+virtual batch is reassembled into shuffled order inside the compiled step
+(``--reassembly {xla,pallas}``: generic scatter vs the fused Pallas
+vb_scatter kernel, shard-local perms under shard_map).
 
 The three execution modes and their equivalence guarantees are documented
 in ``repro.launch.engine``; the pipelined and serial paths produce
@@ -44,6 +47,11 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--remat", default="tl", choices=["tl", "none", "dots"])
+    ap.add_argument("--reassembly", default="xla",
+                    choices=["xla", "pallas"],
+                    help="virtual-batch reassembly on the hot path: XLA's "
+                         "generic scatter or the fused Pallas vb_scatter "
+                         "kernel (shard-local perms under shard_map)")
     ap.add_argument("--mesh", default="debug",
                     choices=["debug", "host", "production"])
     ap.add_argument("--multi-pod", action="store_true",
@@ -66,11 +74,11 @@ def main(argv=None):
 
     engine = Engine(model, cfg, opt, mesh, shape,
                     pipeline=args.pipeline, remat_mode=args.remat,
-                    log_every=args.log_every)
+                    reassembly=args.reassembly, log_every=args.log_every)
     engine.init(jax.random.PRNGKey(0))
     print(f"arch={cfg.name} params={engine.n_params()/1e6:.1f}M "
           f"nodes={args.nodes} mesh={args.mesh}{mesh.devices.shape} "
-          f"pipeline={args.pipeline}")
+          f"pipeline={args.pipeline} reassembly={args.reassembly}")
 
     docs = synthetic_corpus(args.nodes * 64, args.seq, cfg.vocab_size, seed=1)
     shards = shard_corpus(docs, args.nodes)

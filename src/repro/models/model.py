@@ -49,6 +49,15 @@ class Model:
 MTP_WEIGHT = 0.3
 
 
+def mtp_shift_targets(targets):
+    """MTP scores token t+2: shift targets left by one more step and mask
+    the last two positions, whose t+2 targets fall off the sequence.
+    Returns ``(t2, valid)`` for :func:`cross_entropy`."""
+    t2 = jnp.roll(targets, -1, axis=1)
+    valid = jnp.ones_like(t2).at[:, -2:].set(0)
+    return t2, valid
+
+
 def build_model(cfg: ModelConfig) -> Model:
     if cfg.is_encdec:
         return _build_encdec(cfg)
@@ -77,9 +86,7 @@ def _build_decoder_lm(cfg: ModelConfig) -> Model:
         if cfg.mtp_depth:
             h_txt = h[:, F:] if F else h
             mtp = transformer.mtp_logits(params, cfg, tokens, h_txt)
-            # MTP scores token t+2: shift targets left by one more step
-            t2 = jnp.roll(targets, -1, axis=1)
-            valid = jnp.ones_like(t2).at[:, -2:].set(0)
+            t2, valid = mtp_shift_targets(targets)
             mtp_ce = cross_entropy(mtp, t2, valid)
             total = total + MTP_WEIGHT * mtp_ce
             metrics["mtp_ce"] = mtp_ce

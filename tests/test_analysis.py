@@ -1,4 +1,5 @@
-"""Analysis layer: HLO parser trip counts, roofline math, report rendering."""
+"""Analysis layer: HLO parser trip counts, roofline math, report rendering,
+and the virtual-batch reassembly scatter accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,7 +7,8 @@ import pytest
 
 from repro.analysis.hlo_flops import Costs, analyze, parse_module
 from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
-                                     model_flops)
+                                     model_flops,
+                                     predict_reassembly_hbm_bytes)
 from repro.analysis.report import fmt_bytes, roofline_table
 from repro.configs import get_config, get_shape
 
@@ -84,6 +86,95 @@ def test_model_flops_semantics():
     assert tr == pytest.approx(6 * n_act * 4096 * 256)
     assert pf == pytest.approx(2 * n_act * 32768 * 32)
     assert dc == pytest.approx(2 * n_act * 128)
+
+
+# ------------------------------------------------- reassembly accounting
+
+def test_scatter_accounting_counts_generic_scatters():
+    """``.at[perm].set`` compiles to a generic scatter; the analyzer must
+    see it (count + result bytes) so the reassembly assertion below has
+    teeth."""
+    def f(x, p):
+        return jnp.zeros_like(x).at[p].set(x)
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, 4), jnp.float32),
+        jax.ShapeDtypeStruct((8,), jnp.int32)).compile().as_text()
+    c = analyze(hlo)
+    assert c.n_scatter == 1
+    assert c.scatter_bytes == 8 * 4 * 4
+
+
+def test_predict_reassembly_hbm_bytes_halves_under_pallas():
+    xla = predict_reassembly_hbm_bytes(100.0, 10.0, 100.0, strategy="xla")
+    pallas = predict_reassembly_hbm_bytes(100.0, 10.0, 100.0,
+                                          strategy="pallas")
+    assert xla["total"] == 2 * 210.0 and xla["write_multiplier"] == 2.0
+    assert pallas["total"] == 210.0 and pallas["write_multiplier"] == 1.0
+    assert xla["x1"] == 2 * pallas["x1"] == 200.0
+    with pytest.raises(ValueError):
+        predict_reassembly_hbm_bytes(1.0, strategy="bogus")
+
+
+def _fused_step_hlo(reassembly):
+    """Compile the orchestrator's fused centralized-BP step for one real
+    virtual batch (arguments assembled exactly as ``_train_batch_fused``
+    does) and return (HLO text, x1 byte size)."""
+    from repro.configs.paper_models import DATRET
+    from repro.core.node import TLNode
+    from repro.core.orchestrator import TLOrchestrator
+    from repro.core.transport import Transport
+    from repro.models.small import SmallModel
+    from repro.optim import sgd
+
+    model = SmallModel(DATRET)
+    r = np.random.default_rng(0)
+    nodes = [TLNode(i, model,
+                    r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+                    r.integers(0, DATRET.n_classes, n))
+             for i, n in enumerate([9, 7])]
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                          batch_size=16, seed=0, reassembly=reassembly)
+    orch.initialize(jax.random.PRNGKey(0))
+    vb = orch.build_plan(0).batches[0]
+    node_by_id = {n.node_id: n for n in orch.nodes}
+    results, order = orch._collect_visits(vb, node_by_id)
+    segs = [results[nid][0] for nid in order]
+    wires = [results[nid][1] for nid in order]
+    leaf_idx = orch._gw1_leaf_indices()
+    perm = jnp.asarray(np.concatenate(
+        [s.batch_positions for s in segs]).astype(np.int32))
+    x1_cat = jnp.concatenate([w["x1"] for w in wires])
+    dL_cat = jnp.concatenate([w["delta_L"] for w in wires])
+    dx1_cat = jnp.concatenate([w["dx1"] for w in wires])
+    gw1s = tuple(orch._as_leaf_dict(w["gw1"], leaf_idx) for w in wires)
+    hlo = orch._get_fused_step().lower(
+        orch.params, orch.opt_state, x1_cat, dL_cat, dx1_cat, perm,
+        gw1s).compile().as_text()
+    return hlo, x1_cat.size * x1_cat.dtype.itemsize
+
+
+def test_fused_step_reassembly_materializes_x1_once_under_pallas():
+    """The ROADMAP/acceptance contract: with ``reassembly="pallas"`` the
+    compiled fused step materializes the reassembled X^(1) once — no
+    generic scatter op (and hence no zeros-init + row-update double write)
+    survives compilation.  The XLA strategy keeps its three payload
+    scatters, whose accounted bytes cover the reassembled buffers."""
+    hlo_xla, x1_bytes = _fused_step_hlo("xla")
+    hlo_pallas, _ = _fused_step_hlo("pallas")
+    cx, cp = analyze(hlo_xla), analyze(hlo_pallas)
+
+    # xla: one scatter per payload tensor (x1, delta_L, dx1-consistency),
+    # each materializing its full reassembled result buffer
+    assert cx.n_scatter >= 3, cx
+    assert cx.scatter_bytes >= 2 * x1_bytes, cx     # x1 + dx1 at least
+
+    # pallas: the X^(1) intermediate no longer materializes via scatter
+    assert cp.n_scatter == 0, cp
+    assert cp.scatter_bytes == 0, cp
+
+    # the roofline model's write-traffic prediction mirrors the drop
+    assert predict_reassembly_hbm_bytes(x1_bytes, strategy="pallas")["x1"] \
+        == predict_reassembly_hbm_bytes(x1_bytes, strategy="xla")["x1"] / 2
 
 
 def test_report_renders_skips_and_rows():

@@ -37,8 +37,9 @@ def _make_nodes(model, cfg, sizes, seed, jit_visits):
     return nodes
 
 
+@pytest.mark.parametrize("reassembly", ["xla", "pallas"])
 @pytest.mark.parametrize("cfg", [DATRET, CONVNET], ids=lambda c: c.name)
-def test_fused_step_matches_eager_reference(cfg):
+def test_fused_step_matches_eager_reference(cfg, reassembly):
     model = SmallModel(cfg)
     sizes = [13, 8, 11, 9]                                  # 4-node split
     eager = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 7, False),
@@ -46,7 +47,7 @@ def test_fused_step_matches_eager_reference(cfg):
                            fused=False)
     fused = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 7, True),
                            sgd(0.05), Transport(), batch_size=16, seed=0,
-                           fused=True, donate=True)
+                           fused=True, donate=True, reassembly=reassembly)
     key = jax.random.PRNGKey(3)
     eager.initialize(key)
     fused.initialize(key)
@@ -70,6 +71,49 @@ def test_fused_step_matches_eager_reference(cfg):
         tol = ULP_FACTOR * eps * max(1.0, float(np.abs(a).max()))
         assert np.abs(a - b).max() <= tol, \
             f"fused update drifted {np.abs(a - b).max():.3e} > {tol:.3e}"
+
+
+@pytest.mark.parametrize("sizes", [[20, 12], [13, 8, 11]],
+                         ids=["2nodes-uneven", "3nodes-uneven"])
+@pytest.mark.parametrize("cache", [False, True], ids=["strict", "cached"])
+def test_pallas_reassembly_matches_xla_scatter(sizes, cache):
+    """Acceptance grid: the ``reassembly="pallas"`` fused step tracks the
+    XLA-scatter path to float32 ULP across {2,3 uneven nodes} × {model
+    cache on/off} — same stats per step, same parameter trajectory.  (In
+    practice the reassembled values are bit-identical; only downstream jit
+    fusion choices may differ.)"""
+    cfg = DATRET
+    model = SmallModel(cfg)
+
+    def build(reassembly):
+        orch = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 5, True),
+                              sgd(0.05), Transport(), batch_size=16, seed=0,
+                              fused=True, donate=not cache,
+                              cache_model_per_epoch=cache,
+                              reassembly=reassembly)
+        orch.initialize(jax.random.PRNGKey(1))
+        return orch
+
+    xla, pallas = build("xla"), build("pallas")
+    for _ in range(3):
+        sx = xla.train_epoch()
+        sp = pallas.train_epoch()
+        assert len(sx) == len(sp) >= 1
+        for a, b in zip(sx, sp):
+            assert abs(a.loss - b.loss) < 1e-6
+            assert abs(a.acc - b.acc) < 1e-9
+            assert abs(a.grad_consistency - b.grad_consistency) < 1e-6
+            if not cache:
+                assert b.grad_consistency < 1e-5            # eq. 12 holds
+
+    eps = np.finfo(np.float32).eps
+    for pa, pb in zip(jax.tree.leaves(xla.params),
+                      jax.tree.leaves(pallas.params)):
+        a = np.asarray(pa, dtype=np.float64)
+        b = np.asarray(pb, dtype=np.float64)
+        tol = ULP_FACTOR * eps * max(1.0, float(np.abs(a).max()))
+        assert np.abs(a - b).max() <= tol, \
+            f"pallas reassembly drifted {np.abs(a - b).max():.3e} > {tol:.3e}"
 
 
 def test_fused_reuses_one_compiled_step(rng):

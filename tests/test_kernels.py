@@ -17,6 +17,9 @@ from repro.kernels.act_compress import (compress, decompress,
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.rglru import rglru_ref, rglru_scan
 from repro.kernels.ssd import ssd, ssd_ref_bh
+from repro.kernels.vb_scatter import (permute_rows, scatter_rows,
+                                      scatter_rows_ref, vb_scatter,
+                                      vb_scatter_ref)
 
 
 # ------------------------------------------------------------ flash attention
@@ -108,6 +111,110 @@ def test_quantizer_matches_ref_bitexact():
     xr = decompress(payload, x.shape, block_rows=32)
     ref = dequantize_rows_ref(qr, sr)
     np.testing.assert_allclose(np.asarray(xr), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------- vb_scatter
+
+def _segmented_perm(sizes, seed):
+    """Concatenated ``batch_positions`` of a ragged node split: a shuffled
+    partition of 0..N-1 handed out as contiguous per-node segments — the
+    exact index stream the orchestrator's reassembly sees."""
+    N = sum(sizes)
+    pos = np.random.default_rng(seed).permutation(N)
+    segs, o = [], 0
+    for k in sizes:
+        segs.append(pos[o:o + k])
+        o += k
+    return np.concatenate(segs).astype(np.int32)
+
+
+@pytest.mark.parametrize("sizes", [[13, 8, 11], [5, 1, 2], [1, 1, 14]],
+                         ids=["3nodes-uneven", "1sample-node", "two-1sample"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_vb_scatter_forward_and_vjp_match_ref(sizes, dtype):
+    """Forward and custom_vjp backward are *exactly* (not just ULP-) equal
+    to the pure-jnp scatter oracle over ragged node splits — the kernel and
+    its transpose are pure row copies, so any difference is a bug."""
+    N = sum(sizes)
+    r = np.random.default_rng(N * 7 + 1)
+    perm = jnp.asarray(_segmented_perm(sizes, seed=N))
+    x1 = jnp.asarray(r.normal(size=(N, 4, 6))).astype(dtype)
+    dL = jnp.asarray(r.normal(size=(N, 3))).astype(dtype)
+    dx1 = jnp.asarray(r.normal(size=(N, 4, 6))).astype(dtype)
+
+    for got, want in zip(vb_scatter(x1, dL, dx1, perm),
+                         vb_scatter_ref(x1, dL, dx1, perm)):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+
+    # row-dependent weights make the cotangent row-distinguishable, so a
+    # transposed-with-the-wrong-index backward cannot pass
+    w = jnp.arange(1, N + 1, dtype=jnp.float32)
+
+    def make_loss(scatter_fn):
+        def loss(x1, dL, dx1):
+            a, b, c = scatter_fn(perm, (x1, dL, dx1))
+            return (w[:, None, None] * a.astype(jnp.float32) ** 2).sum() \
+                + (w[:, None] * b.astype(jnp.float32)).sum() \
+                + (w[:, None, None] * c.astype(jnp.float32) ** 3).sum()
+        return loss
+
+    g_kernel = jax.jit(jax.grad(make_loss(scatter_rows),
+                                argnums=(0, 1, 2)))(x1, dL, dx1)
+    g_ref = jax.jit(jax.grad(make_loss(scatter_rows_ref),
+                             argnums=(0, 1, 2)))(x1, dL, dx1)
+    for got, want in zip(g_kernel, g_ref):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                      np.asarray(want, np.float32))
+
+
+def test_vb_scatter_mixed_int_rows_ride_the_fused_pass():
+    """Integer rows (tokens/targets on the production path) scatter in the
+    same kernel launch; differentiation skips them via float0 cotangents."""
+    N = 9
+    r = np.random.default_rng(3)
+    perm = jnp.asarray(_segmented_perm([4, 1, 4], seed=11))
+    h1 = jnp.asarray(r.normal(size=(N, 5)).astype(np.float32))
+    tok = jnp.asarray(r.integers(0, 97, (N, 4)).astype(np.int32))
+
+    hs, ts = scatter_rows(perm, (h1, tok))
+    hr, tr = scatter_rows_ref(perm, (h1, tok))
+    np.testing.assert_array_equal(np.asarray(hs), np.asarray(hr))
+    np.testing.assert_array_equal(np.asarray(ts), np.asarray(tr))
+
+    def loss(h1):
+        a, t = scatter_rows(perm, (h1, tok))
+        return (a * t.astype(jnp.float32).sum(-1, keepdims=True)).sum()
+
+    def loss_ref(h1):
+        a, t = scatter_rows_ref(perm, (h1, tok))
+        return (a * t.astype(jnp.float32).sum(-1, keepdims=True)).sum()
+
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(jax.grad(loss))(h1)),
+        np.asarray(jax.jit(jax.grad(loss_ref))(h1)))
+
+
+@pytest.mark.parametrize("mode", ["scatter", "gather"])
+def test_permute_rows_column_blocking(mode):
+    """Multi-column-block grid (narrow block_cols) and width-clamped narrow
+    refs produce the same rows as the unblocked oracle in both routings."""
+    N = 7
+    r = np.random.default_rng(5)
+    idx = jnp.asarray(r.permutation(N).astype(np.int32))
+    wide = jnp.asarray(r.normal(size=(N, 20)).astype(np.float32))
+    narrow = jnp.asarray(r.normal(size=(N, 3)).astype(np.float32))
+    got_w, got_n = permute_rows(idx, wide, narrow, mode=mode, block_cols=8)
+    if mode == "scatter":
+        want_w = jnp.zeros_like(wide).at[idx].set(wide)
+        want_n = jnp.zeros_like(narrow).at[idx].set(narrow)
+    else:
+        want_w, want_n = wide[idx], narrow[idx]
+    np.testing.assert_array_equal(np.asarray(got_w), np.asarray(want_w))
+    np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
 
 
 @given(rows=st.integers(1, 40), cols=st.integers(2, 64),
