@@ -1,0 +1,99 @@
+"""Gate a BENCH_*.json artifact against its committed schema.
+
+The benchmark artifacts are the repo's machine-readable perf trail; CI runs
+the smoke benchmark on every push and uploads the artifact, but an artifact
+whose *shape* silently changed (a renamed column, a dropped key) would rot
+every downstream diff.  This tool extracts the artifact's schema — the set
+of key paths with leaf type classes, with numeric dict keys (the per-node-
+count tables) wildcarded to ``*`` — and fails if it drifts from the
+committed schema file.
+
+    python benchmarks/check_artifact_schema.py BENCH_tl_step_smoke.json \
+        --schema benchmarks/schemas/tl_step_smoke.schema.json
+
+``--write`` regenerates the schema file from the artifact (the one
+legitimate way to change the contract — the diff then shows up in review).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _leaf_type(v) -> str:
+    if isinstance(v, bool):                 # before int: bool <: int
+        return "bool"
+    if isinstance(v, (int, float)):
+        return "number"
+    if isinstance(v, str):
+        return "string"
+    if v is None:
+        return "null"
+    if isinstance(v, list):
+        return "array"
+    return type(v).__name__
+
+
+def _is_numeric_key(k: str) -> bool:
+    try:
+        float(k)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+def extract_schema(obj, prefix: str = "") -> set:
+    """Key paths + leaf type classes, numeric dict keys wildcarded.
+
+    ``{"nodes": {"2": {"x": 1.0}, "4": {"x": 2.0}}}`` extracts to
+    ``{"nodes.*.x:number"}`` — the per-node-count columns are one schema
+    entry regardless of which node counts a given run swept."""
+    if isinstance(obj, dict):
+        out = set()
+        for k, v in obj.items():
+            part = "*" if _is_numeric_key(k) else str(k)
+            out |= extract_schema(v, f"{prefix}.{part}" if prefix else part)
+        return out
+    return {f"{prefix}:{_leaf_type(obj)}"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", help="BENCH_*.json artifact to validate")
+    ap.add_argument("--schema", required=True,
+                    help="committed schema file (sorted key-path list)")
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the schema file from the artifact "
+                         "instead of validating")
+    args = ap.parse_args(argv)
+
+    with open(args.artifact) as f:
+        artifact = json.load(f)
+    got = extract_schema(artifact)
+
+    if args.write:
+        with open(args.schema, "w") as f:
+            json.dump({"artifact": args.artifact.split("/")[-1],
+                       "paths": sorted(got)}, f, indent=1)
+            f.write("\n")
+        print(f"wrote {len(got)} schema paths to {args.schema}")
+        return 0
+
+    with open(args.schema) as f:
+        want = set(json.load(f)["paths"])
+    missing, unexpected = sorted(want - got), sorted(got - want)
+    if missing or unexpected:
+        print(f"SCHEMA DRIFT in {args.artifact}:")
+        for p in missing:
+            print(f"  missing:    {p}")
+        for p in unexpected:
+            print(f"  unexpected: {p}")
+        print("(intentional? regenerate with --write and commit the diff)")
+        return 1
+    print(f"schema OK: {len(got)} paths match {args.schema}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,6 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.paper_models import DATRET
 from repro.core.node import TLNode

@@ -12,10 +12,13 @@
                     full sweep is ``python benchmarks/bench_tl_step.py``
   table1_quality  — paper Table 1: quality of CL/TL/FL/SL/SL+/SFL across
                     four dataset families
+
+``--only name[,name...]`` runs a subset (CI's smoke-benchmark step runs
+``--only tl_step_smoke`` and schema-gates the artifact it emits).
 """
+import argparse
 import json
 import os
-import sys
 import time
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -28,7 +31,12 @@ def _write_artifact(name: str, payload: dict) -> str:
     return path
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run "
+                         "(default: all)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (bench_tl_step, fig3_scaling, roofline_report,
@@ -44,6 +52,12 @@ def main() -> None:
         ("tl_step_smoke", lambda: bench_tl_step.main(smoke=True)),
         ("table1_quality", table1_quality.main),
     ]
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",")}
+        unknown = wanted - {n for n, _ in entries}
+        if unknown:
+            raise SystemExit(f"unknown benchmark(s): {sorted(unknown)}")
+        entries = [(n, f) for n, f in entries if n in wanted]
     for name, fn in entries:
         t = time.time()
         try:

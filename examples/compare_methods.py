@@ -4,7 +4,6 @@ paper's Table 1 experiment in miniature, with communication accounting.
     PYTHONPATH=src python examples/compare_methods.py
 """
 import jax
-import numpy as np
 
 import dataclasses
 

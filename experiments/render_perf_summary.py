@@ -1,5 +1,5 @@
 """Render §Perf summary: baseline vs v2 vs v3opt for the three pairs."""
-import json, glob, os, sys
+import json, os
 
 def get(arch, shape, tag, mesh="single"):
     p = f"experiments/artifacts/{arch}__{shape}__{mesh}__{tag}.json"

@@ -16,7 +16,6 @@ reduce+broadcast halves).
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import asdict, dataclass, field
 from typing import Dict, Optional

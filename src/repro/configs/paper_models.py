@@ -11,7 +11,7 @@ Transformer) at CPU-tractable sizes via ``repro.models.small``:
                     image datasets.
 * ``tiny_transformer`` — the paper's IMDB sentiment Transformer, reduced.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 

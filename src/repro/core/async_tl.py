@@ -25,13 +25,14 @@ eager per-call ``jax.vjp``; ``fused=False`` keeps the eager oracle.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.faults import RecoveryPolicy, VisitDropped
 
 
 @dataclass
@@ -129,11 +130,32 @@ def async_train_epoch(orch, *, min_contributions: Optional[int] = None,
             lat = node_latency_fn(seg.node_id)
             tracker.observe(seg.node_id, lat)
             orch.transport.tick(lat)
-            fp = node.forward_visit(seg.local_indices, vb.size)
-            wire = orch.transport.send(
-                "activations_grads",
-                {"x1": fp.x1, "delta_L": fp.delta_L, "gw1": fp.gw1},
-                compressible=True)
+            # fault lanes (repro.core.faults): retry a dropped visit up to
+            # the recovery budget; a persistently failing contribution is
+            # *skipped* rather than fatal — the gradient buffer's
+            # min_contributions semantics already tolerate missing visits
+            # (async mode trades exactness for liveness by design)
+            pol = getattr(orch, "recovery", None) or RecoveryPolicy()
+            fp = wire = None
+            for attempt in range(pol.max_attempts):
+                try:
+                    with orch.transport.fault_lane(
+                            (orch._epoch, vb.batch_id, seg.node_id, attempt)):
+                        fp = node.forward_visit(seg.local_indices, vb.size)
+                        wire = orch.transport.send(
+                            "activations_grads",
+                            {"x1": fp.x1, "delta_L": fp.delta_L,
+                             "gw1": fp.gw1},
+                            compressible=True)
+                    break
+                except VisitDropped:
+                    wire = None
+                    # back off only before an attempt that will happen —
+                    # the clock must not charge a retry that is never made
+                    if pol.backoff_s and attempt + 1 < pol.max_attempts:
+                        orch.transport.tick(pol.backoff_s * (attempt + 1))
+            if wire is None:
+                continue
             # centralized BP for this contribution (recompute from X^(1)).
             # gw1 may be a pruned {leaf_index: array} dict (jitted nodes) or
             # a full param pytree (eager reference nodes); either way it

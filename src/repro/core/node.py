@@ -27,7 +27,7 @@ the rest of the tree is structurally zero and is never materialized or sent.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -53,10 +53,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import (FaultEvent, NodeHealth, RecoveryPolicy,
+                               UnrecoverableFault, VisitDropped)
 from repro.core.node import (TLNode, add_first_layer_grads,
                              first_layer_grad_leaves)
 from repro.core.transport import Transport
-from repro.core.virtual_batch import VirtualBatchPlan, create_virtual_batches
+from repro.core.virtual_batch import (VirtualBatchPlan, assert_exactly_once,
+                                      create_virtual_batches)
 
 
 @dataclass
@@ -75,7 +78,9 @@ class TLOrchestrator:
                  check_consistency: bool = True,
                  cache_model_per_epoch: bool = False,
                  fused: bool = True, donate: bool = False,
-                 pipelined: bool = False, reassembly: str = "xla"):
+                 pipelined: bool = False, reassembly: str = "xla",
+                 replicas: Optional[Dict[int, TLNode]] = None,
+                 recovery: Optional[RecoveryPolicy] = None):
         self.model = model
         self.nodes = list(nodes)
         self.opt = optimizer
@@ -114,9 +119,20 @@ class TLOrchestrator:
         # while batch k's centralized BP consumes; a pure reordering of the
         # same math (see the cross-path equivalence test grid)
         self.pipelined = pipelined
+        # fault recovery (repro.core.faults): replicas hold bit-identical
+        # copies of a primary node's shard; the recovery policy governs
+        # retries/backoff/failover/eviction when the transport's fault lanes
+        # drop visit payloads.  Recovery is lossless: a retried or
+        # failed-over visit produces the same wire payload, so losses and
+        # params stay bit-equal to the fault-free run (tests/test_faults.py).
+        self.replicas: Dict[int, TLNode] = dict(replicas or {})
+        self.recovery = recovery or RecoveryPolicy()
+        self.fault_log: List[FaultEvent] = []
+        self._health: Dict[int, NodeHealth] = {}
         self.params = None
         self.opt_state = None
         self._epoch = 0
+        self._step = 0              # global virtual-batch counter (ckpt id)
         self._fused_step = None
         self._contrib_step = None
         self._gw1_leaves = None
@@ -143,46 +159,134 @@ class TLOrchestrator:
         by ``bp_time_fn(N)`` — the quantity the pipelined engine overlaps
         with the next batch's visits."""
         self.transport.tick(self.bp_time_fn(vb.size))
+        self._step += 1
         if self.fused:
             return self._train_batch_fused(vb, results, order)
         return self._train_batch_eager(vb, results, order)
+
+    def _executor(self, node_id: int, node_by_id) -> TLNode:
+        """The node that should execute ``node_id``'s segments right now:
+        the primary, or — once the health tracker evicted it mid-epoch —
+        its replica (traversal re-planning without touching the plan: the
+        segment's local indices and batch positions are identical on the
+        replica's bit-identical shard)."""
+        h = self._health.get(node_id)
+        if h is not None and h.evicted and node_id in self.replicas:
+            return self.replicas[node_id]
+        return node_by_id[node_id]
 
     def _collect_visits(self, vb, node_by_id, *, issue: bool = False):
         """Producer half of one TL step: distributed FP along the traversal
         plan (pipelined: transfers of one node overlap the next node's
         compute — paper §3.2).  ``issue=True`` (the epoch engine's mode)
         uses :meth:`TLNode.issue_visit` so no payload is host-materialized
-        while a previous batch's BP is still in flight."""
+        while a previous batch's BP is still in flight.  Every visit runs
+        under the transport's fault lane and the recovery policy (retry,
+        backoff, replica failover); the reassembly invariant — each virtual
+        batch row assembled exactly once — is re-verified after recovery."""
         results, order = {}, []
 
         if not self.cache_model_per_epoch:
             with self.transport.parallel():
                 for seg in vb.traversal:
-                    node = node_by_id[seg.node_id]
+                    node = self._executor(seg.node_id, node_by_id)
                     node.receive_model(
                         self.transport.send("model", self.params))
 
         with self.transport.parallel():
             for seg in vb.traversal:
-                node = node_by_id[seg.node_id]
-                self.transport.tick(self.compute_time_fn(len(seg.local_indices)))
-                visit = node.issue_visit if issue else node.forward_visit
-                fp = visit(seg.local_indices, vb.size)
-                # the wire format is protocol-defined: stats travel as fixed
-                # 4-byte scalars whether the producing path materialized them
-                # on the host (eager serial) or left them device-resident
-                # (jitted / pipelined) — byte accounting must not depend on
-                # *when* the host syncs
-                wire = self.transport.send(
-                    "activations_grads",
-                    {"x1": fp.x1, "delta_L": fp.delta_L, "dx1": fp.dx1,
-                     "gw1": fp.gw1,
-                     "loss_sum": jnp.asarray(fp.loss_sum, jnp.float32),
-                     "n_correct": jnp.asarray(fp.n_correct, jnp.int32)},
-                    compressible=True)
+                wire = self._visit_with_recovery(vb, seg, node_by_id,
+                                                 issue=issue)
                 results[seg.node_id] = (seg, wire)
                 order.append(seg.node_id)
+        assert_exactly_once(vb.size, [results[nid][0] for nid in order])
         return results, order
+
+    def _visit_with_recovery(self, vb, seg, node_by_id, *, issue: bool):
+        """One traversal segment, retried/re-routed until a payload lands.
+
+        Attempt ``a`` runs inside ``transport.fault_lane((epoch, batch,
+        node, a))`` — the seeded verdict is a pure function of that key, so
+        serial/pipelined/resumed execution all see the same faults.  On a
+        drop: linear backoff on the simulated clock, failover to the
+        node's replica after ``retries_before_failover`` failed attempts
+        (re-sending the model the primary was visiting with — charged), and
+        mid-epoch eviction of the primary after ``evict_after`` cumulative
+        failures.  Raises :class:`UnrecoverableFault` once
+        ``max_attempts`` is exhausted — never a partial virtual batch."""
+        tr, pol = self.transport, self.recovery
+        primary = node_by_id[seg.node_id]
+        executor = self._executor(seg.node_id, node_by_id)
+        failed_over = executor is not primary
+        attempt = 0
+        # one segment's attempts are sequential on the wire: chain them so
+        # a retried upload adds to the parallel window's cost instead of
+        # hiding under its max() — the retry cost must be visible on the
+        # simulated clock, not just in the byte counters
+        with tr.chain():
+            while True:
+                key = (self._epoch, vb.batch_id, seg.node_id, attempt)
+                try:
+                    with tr.fault_lane(key):
+                        tr.tick(
+                            self.compute_time_fn(len(seg.local_indices)))
+                        visit = (executor.issue_visit if issue
+                                 else executor.forward_visit)
+                        fp = visit(seg.local_indices, vb.size)
+                        # the wire format is protocol-defined: stats travel
+                        # as fixed 4-byte scalars whether the producing path
+                        # materialized them on the host (eager serial) or
+                        # left them device-resident (jitted / pipelined) —
+                        # byte accounting must not depend on *when* the
+                        # host syncs
+                        return tr.send(
+                            "activations_grads",
+                            {"x1": fp.x1, "delta_L": fp.delta_L,
+                             "dx1": fp.dx1, "gw1": fp.gw1,
+                             "loss_sum": jnp.asarray(fp.loss_sum,
+                                                     jnp.float32),
+                             "n_correct": jnp.asarray(fp.n_correct,
+                                                      jnp.int32)},
+                            compressible=True)
+                except VisitDropped:
+                    attempt += 1
+                    h = self._health.setdefault(seg.node_id, NodeHealth())
+                    h.failures += 1
+                    has_replica = seg.node_id in self.replicas
+                    if (has_replica and not h.evicted
+                            and h.failures >= pol.evict_after):
+                        # re-plan: the primary is done for; all later
+                        # segments of this node route straight to the
+                        # replica
+                        h.evicted = True
+                        self.fault_log.append(FaultEvent(key, "evict"))
+                    # fail over when the retry budget says so — or as the
+                    # last act before giving up, so a configured replica is
+                    # always tried even under a retries_before_failover >
+                    # max_attempts misconfiguration
+                    if (not failed_over and has_replica
+                            and (h.evicted
+                                 or attempt >= pol.retries_before_failover
+                                 or attempt >= pol.max_attempts)):
+                        executor = self.replicas[seg.node_id]
+                        failed_over = True
+                        # the replica must visit with exactly the params the
+                        # primary held (bit-identical recovery) — re-sent
+                        # and charged like any model redistribution
+                        executor.receive_model(
+                            tr.send("model", primary.params))
+                        self.fault_log.append(FaultEvent(key, "failover"))
+                    elif attempt >= pol.max_attempts:
+                        raise UnrecoverableFault(
+                            f"traversal segment for node {seg.node_id} "
+                            f"(batch {vb.batch_id}, epoch {self._epoch}) "
+                            f"still failing after {attempt} attempts and "
+                            f"no {'further ' if has_replica else ''}replica "
+                            "to fail over to") from None
+                    else:
+                        self.fault_log.append(FaultEvent(key, "retry"))
+                    if pol.backoff_s:
+                        tr.tick(pol.backoff_s * attempt)
 
     # ---- first-layer gradient support (structural-zero pruning) -----------
     def _gw1_leaf_indices(self):
@@ -383,18 +487,47 @@ class TLOrchestrator:
                      for l, a, c in vals]
         return stats
 
-    def train_epoch(self) -> List[StepStats]:
+    def _epoch_batches(self, plan: VirtualBatchPlan, start_batch: int,
+                       max_batches: Optional[int]):
+        """The slice of this epoch's batches to run, plus whether running
+        them completes the epoch (mid-epoch resume/kill support)."""
+        if start_batch and self.cache_model_per_epoch:
+            raise ValueError(
+                "mid-epoch resume (start_batch > 0) is incompatible with "
+                "cache_model_per_epoch=True: the nodes' epoch-start "
+                "parameters are not recoverable from a step checkpoint")
+        stop = (len(plan.batches) if max_batches is None
+                else min(len(plan.batches), start_batch + max_batches))
+        return plan.batches[start_batch:stop], stop >= len(plan.batches)
+
+    def train_epoch(self, *, start_batch: int = 0,
+                    max_batches: Optional[int] = None) -> List[StepStats]:
+        """One epoch (or, for kill/resume, the ``[start_batch, start_batch
+        + max_batches)`` slice of one).  The virtual-batch plan is a pure
+        function of ``seed + epoch``, so a resumed run re-derives exactly
+        the plan the killed run was executing and skips the batches whose
+        updates the checkpoint already contains; ``_epoch`` advances only
+        when the epoch's final batch ran."""
         if self.pipelined:
             from repro.core.pipeline import pipelined_train_epoch
-            return pipelined_train_epoch(self)
+            return pipelined_train_epoch(self, start_batch=start_batch,
+                                         max_batches=max_batches)
         plan = self.build_plan(self._epoch)
+        batches, completes = self._epoch_batches(plan, start_batch,
+                                                 max_batches)
         node_by_id = {n.node_id: n for n in self.nodes}
         if self.cache_model_per_epoch:
             with self.transport.parallel():
                 for n in self.nodes:
-                    n.receive_model(self.transport.send("model", self.params))
-        stats = [self.train_batch(vb, node_by_id) for vb in plan.batches]
-        self._epoch += 1
+                    # epoch-start distribution targets the *executor*: an
+                    # evicted primary's replica carries its segments now,
+                    # and must hold the epoch parameters, not the stale
+                    # ones from the failover that evicted the primary
+                    self._executor(n.node_id, node_by_id).receive_model(
+                        self.transport.send("model", self.params))
+        stats = [self.train_batch(vb, node_by_id) for vb in batches]
+        if completes:
+            self._epoch += 1
         return self._finalize_epoch_stats(stats)
 
     def fit(self, key, epochs: int) -> List[StepStats]:
@@ -404,6 +537,68 @@ class TLOrchestrator:
         for _ in range(epochs):
             out.extend(self.train_epoch())
         return out
+
+    # ------------------------------------------------- checkpoint / resume
+    @property
+    def step(self) -> int:
+        """Global virtual-batch counter (checkpoint step index)."""
+        return self._step
+
+    def state_dict(self):
+        """Everything a killed run needs to resume ULP-identically: the
+        parameter/optimizer pytrees plus the traversal cursor (epoch and
+        position within it).  The virtual-batch plan itself is *not* stored
+        — it is a pure function of ``seed + epoch`` and is re-derived on
+        resume, which is what makes mid-epoch recovery exact.  Transport
+        byte/clock accounting and node-health eviction state are NOT part
+        of the state: a resumed run re-learns them, which changes only the
+        audit trail, never the arithmetic."""
+        # batches per epoch, computed without touching the transport (a
+        # checkpoint must not perturb byte accounting): Algorithm 1 drops
+        # the remainder, so every epoch has total_samples // batch_size
+        plan_len = max(sum(int(n.x.shape[0]) for n in self.nodes)
+                       // self.batch_size, 1)
+        return {"arrays": {"params": self.params,
+                           "opt_state": self.opt_state},
+                "meta": {"epoch": self._epoch, "step": self._step,
+                         "batch_in_epoch": self._step % plan_len,
+                         "seed": self.seed,
+                         "batch_size": self.batch_size}}
+
+    def load_state_dict(self, state) -> int:
+        """Restore from :meth:`state_dict`; returns the batch index within
+        the current epoch to resume from (pass to ``train_epoch
+        (start_batch=...)``)."""
+        meta = state["meta"]
+        if meta["seed"] != self.seed or meta["batch_size"] != self.batch_size:
+            raise ValueError(
+                "checkpoint was trained with a different traversal plan "
+                f"(seed={meta['seed']}, batch_size={meta['batch_size']}): "
+                "resuming would replay different virtual batches")
+        self.params = state["arrays"]["params"]
+        self.opt_state = state["arrays"]["opt_state"]
+        self._epoch = int(meta["epoch"])
+        self._step = int(meta["step"])
+        return int(meta["batch_in_epoch"])
+
+    def save(self, ckpt_dir: str) -> str:
+        """Step-boundary checkpoint via ``repro.checkpoint`` (atomic)."""
+        from repro.checkpoint import save_checkpoint
+        st = self.state_dict()
+        return save_checkpoint(ckpt_dir, self._step, st["arrays"],
+                               extra=st["meta"])
+
+    def restore(self, ckpt_dir: str, step: Optional[int] = None) -> int:
+        """Load the latest (or ``step``'s) checkpoint; returns the
+        batch-in-epoch resume cursor.  ``initialize`` must NOT have donated
+        params away — restore overwrites whatever is held."""
+        from repro.checkpoint import load_checkpoint
+        if self.params is None:
+            self.initialize(jax.random.PRNGKey(0))     # structure template
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        arrays, meta = load_checkpoint(ckpt_dir, tree, step)
+        return self.load_state_dict(
+            {"arrays": arrays, "meta": meta["extra"]})
 
     # ----------------------------------------------------------- evaluation
     def evaluate(self, x, y):

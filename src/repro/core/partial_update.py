@@ -9,8 +9,8 @@ the threshold, so drift is bounded by ``threshold`` per weight.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -86,18 +86,28 @@ class PipelinedEpochEngine:
         return vb, results, order
 
     # -------------------------------------------------------------- epochs
-    def run_epoch(self) -> List:
+    def run_epoch(self, *, start_batch: int = 0,
+                  max_batches: int | None = None) -> List:
+        """One (possibly resumed/truncated) epoch through the double
+        buffer.  ``start_batch``/``max_batches`` mirror
+        ``TLOrchestrator.train_epoch`` — the plan is re-derived from
+        ``seed + epoch`` and sliced, so a killed pipelined run resumes on
+        exactly the batches whose updates the checkpoint lacks."""
         orch = self.orch
         tr = orch.transport
         plan = orch.build_plan(orch._epoch)
+        batches, completes = orch._epoch_batches(plan, start_batch,
+                                                 max_batches)
         node_by_id = {n.node_id: n for n in orch.nodes}
-        batches = plan.batches
         stats: List = []
 
         if orch.cache_model_per_epoch:
             with tr.parallel():
                 for n in orch.nodes:
-                    n.receive_model(tr.send("model", orch.params))
+                    # executor-aware: an evicted primary's replica carries
+                    # its segments and needs the epoch parameters
+                    orch._executor(n.node_id, node_by_id).receive_model(
+                        tr.send("model", orch.params))
 
         if batches:
             # pipeline fill: batch 0 has nothing to overlap with
@@ -121,10 +131,13 @@ class PipelinedEpochEngine:
                     self._enqueue(self._produce(nxt, node_by_id, scope))
             self._queue.popleft()
 
-        orch._epoch += 1
+        if completes:
+            orch._epoch += 1
         return orch._finalize_epoch_stats(stats)
 
 
-def pipelined_train_epoch(orch) -> List:
+def pipelined_train_epoch(orch, *, start_batch: int = 0,
+                          max_batches: int | None = None) -> List:
     """Run one epoch of ``orch`` through the double-buffered engine."""
-    return PipelinedEpochEngine(orch).run_epoch()
+    return PipelinedEpochEngine(orch).run_epoch(start_batch=start_batch,
+                                                max_batches=max_batches)

@@ -81,7 +81,9 @@ def runtime_sfl(spec: WorkloadSpec) -> float:
 
 
 def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
-               cache_model: bool = False, pipelined: bool = True) -> float:
+               cache_model: bool = False, pipelined: bool = True,
+               drop_prob: float = 0.0, straggle_prob: float = 0.0,
+               straggle_factor: float = 1.0) -> float:
     """Eq. 19, optionally with the double-buffered cross-batch pipeline.
 
     ``pipelined=True`` mirrors the epoch engine (``repro.core.pipeline``):
@@ -92,19 +94,40 @@ def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
     With ``cache_model=True`` the whole visit (client compute + transfers)
     rides the overlap; in strict mode only the transfers do (client compute
     must wait for the updated parameters).
-    """
+
+    The fault knobs mirror ``repro.core.faults.FaultSpec``: the visit phase
+    (client compute + wire) is expanded by the expected retry/straggle
+    multiplier :func:`repro.core.faults.fault_expansion` — geometric
+    retries under ``drop_prob``, expected slowdown under ``straggle_prob``
+    × ``straggle_factor`` — so the analytic clock stays comparable to the
+    fault-injected transport-simulated clock.  The orchestrator's
+    centralized BP is unaffected (faults live on the node/wire side), and
+    losslessness means the *arithmetic* is unchanged either way: only time
+    expands."""
+    from repro.core.faults import fault_expansion
+    expansion = fault_expansion(drop_prob, straggle_prob, straggle_factor)
     _, samples, t_fwd, t_bwd = _per_round(spec)
     n_local_batches = samples // spec.batch_size
-    # client computes FP + local BP for the three gradients
-    t_client = samples * (t_fwd + t_bwd)
+    # client computes FP + local BP for the three gradients; under faults
+    # the whole visit phase (compute + its wire, below) expands by the
+    # expected number of attempts × expected straggle factor
+    t_client = samples * (t_fwd + t_bwd) * expansion
     per_sample_wire = (2 * spec.first_layer_bytes_per_sample
                        + spec.logits_bytes_per_sample)
     wire = samples * per_sample_wire + n_local_batches * spec.first_layer_param_bytes
     if compressed:
         wire = wire / 4 + samples * 4                      # int8 + scales (§5.2)
+    total_wire = wire
     if not cache_model:
-        wire += n_local_batches * spec.model_bytes         # per-batch redistribution
-    t_comm = _t_comm(spec, wire)
+        total_wire += n_local_batches * spec.model_bytes   # redistribution
+    # only the visit-payload wire is subject to retries/straggle — model
+    # redistribution rides outside the fault lanes in the simulator (a
+    # failover re-send is second-order).  The expansion adds pure transfer
+    # time of the retried visit wire on top of the unchanged fault-free
+    # eq. 19 term (one RTT per round, as before), so the pre-existing
+    # analytic baseline is bit-identical when the fault knobs are off
+    t_comm = (_t_comm(spec, total_wire)
+              + (expansion - 1.0) * wire / spec.bandwidth_bytes_per_s)
     # orchestrator recompute + BP on the full virtual batch
     t_server = (samples * spec.n_nodes * (t_fwd + t_bwd)
                 * spec.client_flops_per_s / spec.server_flops_per_s)

@@ -37,7 +37,6 @@ reassembly adds zero collective traffic at any node count.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional
 
 import jax

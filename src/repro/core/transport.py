@@ -24,6 +24,18 @@ Overlap never changes *bytes*: accounting of ``bytes_sent`` per tag is
 identical however windows and lanes are arranged — only ``clock_s`` moves.
 Every closed window/scope is appended to ``window_log`` for per-window
 byte/clock inspection.
+
+Fault lanes (``repro.core.faults``): a transport built with a
+``FaultInjector`` exposes ``fault_lane(key)`` — every transfer and compute
+tick inside the lane is subject to the injector's seeded per-attempt
+verdict for ``key``.  A *straggling* lane multiplies its clock costs by the
+straggle factor (bytes unchanged); a *dropped* lane charges its transfers
+normally (the payload burned wire time before it was lost) and raises
+``VisitDropped`` at lane exit so the caller retries.  Either way a
+``WindowRecord(kind="fault:drop" | "fault:straggle")`` lands in
+``window_log`` with the attempt's bytes and clock, so the retry cost is
+inspectable: total bytes = fault-free bytes + the sum of ``fault:drop``
+record bytes, exactly — never silently double-counted.
 """
 from __future__ import annotations
 
@@ -33,6 +45,9 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.faults import (DROP, OK, FaultEvent, FaultInjector,
+                               VisitDropped, VisitOutcome)
 
 
 @dataclass
@@ -58,6 +73,18 @@ def payload_bytes(tree) -> int:
     return sum(_leaf_bytes(leaf) for leaf in jax.tree.leaves(tree))
 
 
+def _fold_entries(entries) -> Tuple[float, Dict[str, int]]:
+    """Fold (time_s, tag, nbytes) entries into (sequential total, per-tag
+    bytes) — the aggregation every sequential scope (chain, fault lane)
+    applies on exit."""
+    t = sum(e[0] for e in entries)
+    by_tag: Dict[str, int] = {}
+    for _, tag, nb in entries:
+        if nb:
+            by_tag[tag] = by_tag.get(tag, 0) + nb
+    return t, by_tag
+
+
 @dataclass
 class WindowRecord:
     """Per-window accounting entry: how long the window cost on the clock
@@ -65,11 +92,12 @@ class WindowRecord:
     their own record (a parallel window inside an overlap lane appears in
     both), so the log is hierarchical — don't sum ``nbytes`` across records
     expecting ``total_bytes``."""
-    kind: str                                    # "parallel" | "overlap"
+    kind: str                       # "parallel" | "overlap" | "fault:*"
     clock_s: float
     nbytes: int
     by_tag: Dict[str, int] = field(default_factory=dict)
     lanes: Dict[str, float] = field(default_factory=dict)   # overlap only
+    meta: Dict[str, float] = field(default_factory=dict)    # fault lanes only
 
 
 class _OverlapScope:
@@ -116,11 +144,19 @@ class Transport:
     n_messages: int = 0
     clock_s: float = 0.0
     window_log: List[WindowRecord] = field(default_factory=list)
+    # fault injection (repro.core.faults): seeded per-visit verdicts applied
+    # inside fault_lane() scopes; None = a perfectly reliable network
+    faults: Optional[FaultInjector] = None
+    fault_log: List[FaultEvent] = field(default_factory=list)
     # active sinks: a parallel window costs max() of its entries, an overlap
     # lane costs sum(); entries are (time_s, tag, nbytes)
     _window: Optional[List[Tuple[float, str, int]]] = None
     _lane: Optional[List[Tuple[float, str, int]]] = None
     _lane_ticks: bool = True
+    # active fault lane: clock multiplier + per-lane entry capture (for the
+    # fault WindowRecord — copies; deposits still flow to window/lane/clock)
+    _fault_factor: float = 1.0
+    _fault_entries: Optional[List[Tuple[float, str, int]]] = None
 
     # ---- bookkeeping -----------------------------------------------------
     def _deposit(self, t: float, tag: str, nbytes: int):
@@ -134,7 +170,10 @@ class Transport:
     def _account(self, tag: str, nbytes: int):
         self.bytes_sent[tag] = self.bytes_sent.get(tag, 0) + nbytes
         self.n_messages += 1
-        self._deposit(self.network.transfer_time(nbytes), tag, nbytes)
+        t = self.network.transfer_time(nbytes) * self._fault_factor
+        if self._fault_entries is not None:
+            self._fault_entries.append((t, tag, nbytes))
+        self._deposit(t, tag, nbytes)
 
     @contextlib.contextmanager
     def parallel(self):
@@ -162,6 +201,31 @@ class Transport:
                     self._deposit(0.0, tag, nb)
 
     @contextlib.contextmanager
+    def chain(self):
+        """Entries inside are sequential relative to *each other* (cost =
+        sum) even inside a ``parallel()`` window — a retry can never
+        overlap the failed attempt it replaces, so one segment's attempts
+        must not disappear into the window's ``max()``.  On exit the chain
+        deposits one summed entry (plus zero-time per-tag byte entries, so
+        tag attribution survives like a nested window's).  Outside a
+        window this is a no-op: the serial clock and overlap lanes already
+        sum."""
+        if self._window is None:
+            yield
+            return
+        outer = self._window
+        self._window = []
+        try:
+            yield
+        finally:
+            entries, self._window = self._window, outer
+            if entries:
+                t, by_tag = _fold_entries(entries)
+                self._deposit(t, "<chain>", 0)
+                for tag, nb in by_tag.items():
+                    self._deposit(0.0, tag, nb)
+
+    @contextlib.contextmanager
     def overlap(self):
         """Cross-batch overlap scope: lanes opened on the yielded scope run
         concurrently; on exit the clock advances by max over lane totals.
@@ -184,11 +248,57 @@ class Transport:
     def tick(self, seconds: float):
         """Advance the clock for compute time.  Inside an overlap lane (with
         lane ticks enabled) the compute joins that lane; parallel transfer
-        windows never absorb compute."""
+        windows never absorb compute.  Inside a straggling fault lane the
+        compute is slowed by the same factor as the transfers (a straggler
+        node is slow, not just its link)."""
+        seconds = seconds * self._fault_factor
+        if self._fault_entries is not None:
+            self._fault_entries.append((seconds, "<compute>", 0))
         if self._lane is not None and self._lane_ticks:
             self._lane.append((seconds, "<compute>", 0))
         else:
             self.clock_s += seconds
+
+    # ---- fault lanes (repro.core.faults) ---------------------------------
+    @contextlib.contextmanager
+    def fault_lane(self, key: Tuple[int, ...]):
+        """One visit attempt under the injector's verdict for ``key``.
+
+        Yields the :class:`~repro.core.faults.VisitOutcome`.  A straggling
+        lane multiplies every transfer/tick inside by the straggle factor;
+        a dropped lane charges its costs normally and raises
+        :class:`~repro.core.faults.VisitDropped` on (clean) exit — bytes
+        and clock were burned, the payload was not delivered.  Non-``ok``
+        lanes append a ``fault:*`` :class:`WindowRecord` (the attempt's
+        bytes/clock, ``meta={"factor": ...}``) and a
+        :class:`~repro.core.faults.FaultEvent` to ``fault_log``, making the
+        retry cost auditable: total bytes equal fault-free bytes plus the
+        sum of ``fault:drop`` record bytes, exactly."""
+        key = tuple(key)
+        outcome = (self.faults.decide(key) if self.faults is not None
+                   else VisitOutcome(OK, key=key))
+        if outcome.kind == OK:
+            yield outcome
+            return
+        prev_factor = self._fault_factor
+        prev_entries = self._fault_entries
+        self._fault_factor = prev_factor * outcome.factor
+        entries: List[Tuple[float, str, int]] = []
+        self._fault_entries = entries
+        try:
+            yield outcome
+        finally:
+            self._fault_factor = prev_factor
+            self._fault_entries = prev_entries
+            t, by_tag = _fold_entries(entries)
+            nbytes = sum(by_tag.values())
+            self.window_log.append(WindowRecord(
+                f"fault:{outcome.kind}", t, nbytes, by_tag,
+                meta={"factor": outcome.factor}))
+            self.fault_log.append(FaultEvent(
+                key, outcome.kind, outcome.factor, clock_s=t, nbytes=nbytes))
+        if outcome.kind == DROP:
+            raise VisitDropped(key)
 
     @property
     def total_bytes(self) -> int:

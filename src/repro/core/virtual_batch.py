@@ -16,8 +16,7 @@ structure.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
@@ -102,6 +101,30 @@ def make_traversal(global_ids: np.ndarray, node_of: np.ndarray,
             batch_positions=positions.astype(np.int64),
         ))
     return tuple(segs)
+
+
+def assert_exactly_once(size: int, segments: Sequence[NodeSegment]) -> None:
+    """Verify a set of collected segments assembles every virtual-batch row
+    exactly once: their ``batch_positions`` must partition ``0..size-1``.
+
+    This is the reassembly-permutation invariant the fault-recovery path
+    re-derives after retries and replica failover (``repro.core.faults``):
+    however many attempts a segment took, its rows must land in the virtual
+    batch once and only once.  Raises ``RuntimeError`` on violation rather
+    than letting a corrupted perm silently scatter rows on top of each
+    other."""
+    pos = (np.concatenate([s.batch_positions for s in segments])
+           if segments else np.empty((0,), np.int64))
+    if len(pos) != size:
+        raise RuntimeError(
+            f"virtual batch assembled {len(pos)} rows, expected {size}: "
+            "a traversal segment was lost or duplicated during recovery")
+    counts = np.bincount(pos.astype(np.int64), minlength=size)
+    if (counts != 1).any():
+        bad = np.nonzero(counts != 1)[0][:8]
+        raise RuntimeError(
+            "virtual-batch rows not assembled exactly once (positions "
+            f"{bad.tolist()} covered {counts[bad].tolist()} times)")
 
 
 def create_virtual_batches(ranges: Sequence[IndexRange], batch_size: int,

@@ -14,7 +14,7 @@ vs text).  EXPERIMENTS.md validates the paper's relative orderings
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

@@ -11,7 +11,6 @@ BR=128 for d_model=8192 models to leave double-buffer headroom.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -21,8 +21,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.roofline import (Roofline, collective_bytes, model_flops,
-                                     summarize)
+from repro.analysis.roofline import Roofline, model_flops, summarize
 from repro.configs import get_config, get_shape
 from repro.core.tl_step import (make_serve_step, make_train_step,
                                 serve_shardings, train_shardings)

@@ -110,6 +110,7 @@ class Engine:
                  remat_mode: str = "tl", donate: bool = True,
                  microbatch: int = 1, log_every: int = 0,
                  reassembly: str = "none",
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  batch_size: int = 64, transport=None, fused: bool = True,
                  cache_model_per_epoch: bool = False, seed: int = 0):
         if mode not in ("production", "sim"):
@@ -134,6 +135,23 @@ class Engine:
         # docstring); sim mode forwards the strategy to TLOrchestrator
         # ("none" keeps the orchestrator's default xla scatter)
         self.reassembly = reassembly
+        # step-boundary checkpointing (repro.checkpoint): production mode
+        # saves {params, opt_state} every ckpt_every steps; sim mode saves
+        # the orchestrator's full resume state at every epoch boundary.
+        # restore() + run() replays the remaining batches — the loader and
+        # the orchestrator's plan are pure functions of their seeds, so a
+        # killed run resumes ULP-identically (tests/test_faults.py)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        # caller-supplied run metadata stamped into every checkpoint's
+        # extra dict (e.g. the CLI's total-step budget, which fixes the LR
+        # schedule); surfaced back on restore() as .restored_meta so the
+        # caller can refuse a resume whose run config would silently change
+        # the arithmetic (bit-identity holds only for identical configs)
+        self.ckpt_meta: Optional[dict] = None
+        self.restored_meta: Optional[dict] = None
+        self._start_step = 0
+        self._sim_resume = None
         # sim-mode state
         self.batch_size = batch_size
         self.transport = transport
@@ -162,6 +180,48 @@ class Engine:
     def n_params(self) -> int:
         assert self.params is not None, "call init(key) first"
         return sum(p.size for p in jax.tree.leaves(self.params))
+
+    # ------------------------------------------------- checkpoint / resume
+    def save_ckpt(self, params, opt_state, step: int) -> str:
+        from repro.checkpoint import save_checkpoint
+        extra = {"step": step}
+        extra.update(self.ckpt_meta or {})
+        return save_checkpoint(self.ckpt_dir, step,
+                               {"params": params, "opt_state": opt_state},
+                               extra=extra)
+
+    def restore(self, ckpt_dir: Optional[str] = None,
+                step: Optional[int] = None) -> int:
+        """Load a step-boundary checkpoint and arm the next ``run`` to
+        resume from it.  Returns the global step the run will continue at.
+
+        Production mode: params/opt_state are restored bit-exactly (npz is
+        lossless for every dtype the checkpointer handles) and ``run``
+        skips the already-consumed loader batches — the loader is a pure
+        function of its seed, so the replayed tail is exactly the killed
+        run's remainder and the final state is ULP-identical to an
+        uninterrupted run.  Sim mode: the orchestrator's full resume state
+        (including the mid-epoch traversal cursor) is loaded lazily at the
+        next ``run``."""
+        from repro.checkpoint import latest_step, load_checkpoint
+        ckpt_dir = ckpt_dir or self.ckpt_dir
+        if ckpt_dir is None:
+            raise ValueError("no ckpt_dir configured or given")
+        if self.mode == "sim":
+            self._sim_resume = (ckpt_dir, step)
+            got = step if step is not None else latest_step(ckpt_dir)
+            if got is None:
+                raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+            return int(got)
+        if self.params is None:
+            self.init(jax.random.PRNGKey(0))       # structure template
+        tree = {"params": self.params, "opt_state": self.opt_state}
+        arrays, meta = load_checkpoint(ckpt_dir, tree, step)
+        self.params = arrays["params"]
+        self.opt_state = arrays["opt_state"]
+        self.restored_meta = dict(meta["extra"])
+        self._start_step = int(meta["extra"]["step"])
+        return self._start_step
 
     # ------------------------------------------------- production: jit once
     def _build_step(self):
@@ -297,12 +357,24 @@ class Engine:
                     "init(key) (or assign params/opt_state) before rerunning")
             self.init(jax.random.PRNGKey(0))
         step_fn = self._build_step()
+        start = self._start_step
+        if start >= steps:
+            # keep the resume cursor armed: disarming before raising would
+            # turn a caught-and-retried run into a silent from-step-0
+            # replay on top of the restored parameters
+            raise ValueError(
+                f"resume step {start} is past the requested budget "
+                f"steps={steps}: nothing to run")
+        self._start_step = 0
 
         def host_batches():
+            # steps is the *global* budget: a resumed run replays (and
+            # skips) the first `start` loader batches, then runs the rest
             for i, hb in enumerate(loader):
                 if i >= steps:
                     return
-                yield hb
+                if i >= start:
+                    yield hb
 
         if self.pipeline:
             batches = self._device_batches(host_batches())
@@ -316,7 +388,7 @@ class Engine:
         self.params = self.opt_state = None    # donated: drop stale refs
         t0 = time.perf_counter()
         try:
-            for k, batch in enumerate(batches):
+            for k, batch in enumerate(batches, start=start):
                 params, opt_state, loss = step_fn(params, opt_state, batch)
                 losses.append(loss)
                 if not self.pipeline:
@@ -325,6 +397,12 @@ class Engine:
                     # the only mid-run host sync, at the caller's cadence
                     print(f"step {k:4d} loss {float(loss):.4f} "
                           f"({time.perf_counter() - t0:.1f}s)")
+                if (self.ckpt_dir and self.ckpt_every
+                        and (k + 1) % self.ckpt_every == 0):
+                    # step-boundary checkpoint: forces a host sync of the
+                    # state at the caller's chosen cadence (the prefetch
+                    # queue keeps producing meanwhile)
+                    self.save_ckpt(params, opt_state, k + 1)
             jax.block_until_ready(params)
         finally:
             # on failure these may point at donated (deleted) buffers — a
@@ -370,9 +448,20 @@ class Engine:
                 self.orchestrator.initialize(jax.random.PRNGKey(self.seed))
         orch = self.orchestrator
 
+        start_batch = 0
+        if self._sim_resume is not None:
+            ckpt_dir, step = self._sim_resume
+            self._sim_resume = None
+            start_batch = orch.restore(ckpt_dir, step)
+
         epoch_stats, t0 = [], time.perf_counter()
-        for _ in range(epochs):
-            epoch_stats.append(orch.train_epoch())
+        for e in range(epochs):
+            # first (possibly partial) epoch resumes at the checkpoint's
+            # mid-epoch traversal cursor; later epochs run in full
+            epoch_stats.append(orch.train_epoch(
+                start_batch=start_batch if e == 0 else 0))
+            if self.ckpt_dir:
+                orch.save(self.ckpt_dir)     # epoch-boundary checkpoint
         wall = time.perf_counter() - t0
         flat = [s for ep in epoch_stats for s in ep]
         self.params = orch.params

@@ -24,7 +24,6 @@ def generate(model, cfg, params, prompts, gen_len: int, *, temperature=0.0,
     max_len = P + gen_len
     cache = model.init_cache(B, max_len)
     if cfg.is_encdec:
-        from repro.models import encdec
         frames = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model))
         logits, cache = model.prefill(params, cache, prompts, frames)
     else:

@@ -12,7 +12,7 @@ length shrinks so the total sequence stays the assigned seq_len.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

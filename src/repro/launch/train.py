@@ -18,6 +18,12 @@ vb_scatter kernel, shard-local perms under shard_map).
 The three execution modes and their equivalence guarantees are documented
 in ``repro.launch.engine``; the pipelined and serial paths produce
 float32-ULP-identical parameters (``tests/test_engine.py``).
+
+Fault tolerance: ``--ckpt-every N`` writes a step-boundary checkpoint into
+``--ckpt`` every N steps, and ``--resume`` restores the latest one — the
+loader is a pure function of its seed, so the resumed run replays exactly
+the killed run's remaining batches and finishes ULP-identical to an
+uninterrupted run (``tests/test_faults.py``).
 """
 from __future__ import annotations
 
@@ -26,7 +32,6 @@ import argparse
 import jax
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.data.pipeline import VirtualBatchLoader, shard_corpus, synthetic_corpus
@@ -63,8 +68,24 @@ def main(argv=None):
                     help="strictly batch-serial loading (the equivalence "
                          "oracle)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save a step-boundary checkpoint into --ckpt every "
+                         "N steps (0: only the final checkpoint)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt; the "
+                         "run replays the loader tail and finishes "
+                         "ULP-identical to an uninterrupted run")
+    ap.add_argument("--halt-at", type=int, default=0,
+                    help="crash drill: stop after this many global steps "
+                         "without finishing the --steps budget (the LR "
+                         "schedule and checkpoints stay those of the full "
+                         "budget, exactly like a real mid-run kill)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+    if args.resume and not args.ckpt:
+        ap.error("--resume needs --ckpt")
+    if args.ckpt_every and not args.ckpt:
+        ap.error("--ckpt-every needs --ckpt")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
@@ -74,8 +95,34 @@ def main(argv=None):
 
     engine = Engine(model, cfg, opt, mesh, shape,
                     pipeline=args.pipeline, remat_mode=args.remat,
-                    reassembly=args.reassembly, log_every=args.log_every)
-    engine.init(jax.random.PRNGKey(0))
+                    reassembly=args.reassembly, log_every=args.log_every,
+                    ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every)
+    # the LR schedule is a function of the run config (--steps fixes the
+    # cosine horizon, --lr the peak): stamp it into every checkpoint so a
+    # resume under a *different* config fails loudly instead of silently
+    # replaying different arithmetic (bit-identity needs identical configs)
+    # nodes/batch/seq shape the synthetic corpus and loader stream, so they
+    # are part of the resume contract too
+    engine.ckpt_meta = {"arch": cfg.name, "steps": args.steps,
+                        "lr": args.lr, "seed": 0, "nodes": args.nodes,
+                        "batch": args.batch, "seq": args.seq}
+    if args.resume:
+        at = engine.restore()
+        got = engine.restored_meta or {}
+        for key, want in engine.ckpt_meta.items():
+            if key in got and got[key] != want:
+                ap.error(
+                    f"--resume config mismatch: checkpoint was written by a "
+                    f"run with {key}={got[key]!r}, this run has {key}="
+                    f"{want!r} — the LR schedule/data order would diverge "
+                    "from the killed run (pass the original flags)")
+        if at >= args.steps:
+            ap.error(f"checkpoint is already at step {at} of the --steps "
+                     f"{args.steps} budget: nothing to resume")
+        print(f"resumed from step {at}")
+    else:
+        at = 0
+        engine.init(jax.random.PRNGKey(0))
     print(f"arch={cfg.name} params={engine.n_params()/1e6:.1f}M "
           f"nodes={args.nodes} mesh={args.mesh}{mesh.devices.shape} "
           f"pipeline={args.pipeline} reassembly={args.reassembly}")
@@ -84,15 +131,19 @@ def main(argv=None):
     shards = shard_corpus(docs, args.nodes)
     loader = VirtualBatchLoader(shards, args.batch, seed=0)
 
-    result = engine.run(loader, steps=args.steps)
+    budget = min(args.halt_at, args.steps) if args.halt_at else args.steps
+    result = engine.run(loader, steps=budget)
     losses = result.losses.tolist()
     print(f"final loss {np.mean(losses[-5:]):.4f} "
           f"(start {np.mean(losses[:5]):.4f}) "
           f"{result.steps_per_s:.2f} steps/s")
     if args.ckpt:
-        path = save_checkpoint(args.ckpt, args.steps,
-                               {"params": result.params,
-                                "opt": result.opt_state})
+        # same layout as the engine's step-boundary checkpoints, so a
+        # --halt-at (or crashed-after-save) run's final checkpoint is
+        # --resume-able under the same flags; a *completed* budget cannot
+        # be extended — the config guard above refuses a changed --steps
+        path = engine.save_ckpt(result.params, result.opt_state,
+                                at + result.steps)
         print("checkpoint:", path)
     return losses
 

@@ -14,7 +14,6 @@ which is the memory saving that defines MLA.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ are pure.  Initializers take an explicit PRNG key.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,8 @@ API (all pure functions closed over the config):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

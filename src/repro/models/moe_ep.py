@@ -19,9 +19,7 @@ capacity routing.  Differentiable (all_to_all transposes to all_to_all).
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

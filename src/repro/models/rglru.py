@@ -14,7 +14,6 @@ gated by a parallel GeLU branch, linear out.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ These expose the *layer-split* API the TL protocol needs:
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ path so it lowers on any backend.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

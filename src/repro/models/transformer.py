@@ -17,7 +17,7 @@ The Traversal-Learning split points are first-class:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

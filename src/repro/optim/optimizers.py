@@ -11,7 +11,7 @@ row+col factors cut second-moment memory by ~d/2.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

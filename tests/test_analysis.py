@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.hlo_flops import Costs, analyze, parse_module
+from repro.analysis.hlo_flops import analyze
 from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
                                      model_flops,
                                      predict_reassembly_hbm_bytes)

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
@@ -38,6 +37,8 @@ def test_serve_driver_ssm():
 
 
 def test_checkpoint_resume_produces_same_params(tmp_path):
+    """The CLI's final checkpoint uses the engine's resume-able layout
+    ({params, opt_state} + step meta) — the same file --resume restores."""
     from repro.checkpoint import load_checkpoint
     from repro.configs import get_config
     from repro.models import build_model
@@ -50,8 +51,46 @@ def test_checkpoint_resume_produces_same_params(tmp_path):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     opt = adamw(warmup_cosine(3e-4, 10, 6), clip_norm=1.0)
-    tree = {"params": params, "opt": opt.init(params)}
+    tree = {"params": params, "opt_state": opt.init(params)}
     restored, meta = load_checkpoint(d, tree)
-    assert meta["step"] == 6
+    assert meta["step"] == 6 and meta["extra"]["step"] == 6
     assert all(np.isfinite(np.asarray(l, np.float32)).all()
                for l in jax.tree.leaves(restored))
+
+
+def test_train_cli_kill_resume_bitequal(tmp_path):
+    """--ckpt-every + --resume: a killed CLI run resumes and finishes with
+    exactly the uninterrupted run's parameters."""
+    from repro.checkpoint import load_checkpoint
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.optim import adamw, warmup_cosine
+
+    # the killed run keeps the FULL --steps budget (its LR schedule horizon)
+    # and dies mid-run via the --halt-at crash drill — resuming with a
+    # different budget is refused (config-mismatch guard, tested below)
+    args = ["--arch", "deepseek-7b", "--nodes", "2", "--batch", "4",
+            "--seq", "32", "--lr", "3e-3", "--steps", "6"]
+    d_full, d_part = str(tmp_path / "full"), str(tmp_path / "part")
+    train_mod.main(args + ["--ckpt", d_full])
+    train_mod.main(args + ["--ckpt", d_part, "--ckpt-every", "3",
+                           "--halt-at", "3"])
+    train_mod.main(args + ["--ckpt", d_part, "--resume"])
+
+    cfg = get_config("deepseek-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(warmup_cosine(3e-3, 10, 6), clip_norm=1.0)
+    tree = {"params": params, "opt_state": opt.init(params)}
+    a, _ = load_checkpoint(d_full, tree)
+    b, _ = load_checkpoint(d_part, tree)
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+    # resuming under a different config must fail loudly, not silently
+    # replay different arithmetic (the schedule horizon changes past warmup)
+    import pytest
+    with pytest.raises(SystemExit):
+        train_mod.main(["--arch", "deepseek-7b", "--nodes", "2", "--batch",
+                        "4", "--seq", "32", "--lr", "3e-3", "--steps", "12",
+                        "--ckpt", d_part, "--resume"])

@@ -1,0 +1,400 @@
+"""Fault-tolerant traversal: losslessness-under-faults acceptance grid.
+
+TL's claim is exact (bit-level) equivalence with centralized training; the
+fault subsystem (``repro.core.faults``) must preserve that claim while the
+transport drops visit payloads, straggles nodes, or the whole run is killed
+and resumed.  The acceptance grid —
+
+    {fused, eager} × {drop, straggle, kill+resume} × {2, 3 uneven nodes}
+
+— asserts the recovered run's losses and parameters are **bit-equal**
+(stronger than the f32-ULP criterion) to the fault-free run once recovery
+completes, and that recovery is visible where it should be: the simulated
+clock grows, the byte counters grow by exactly the retried payloads, and
+the reassembly invariant (every virtual-batch row assembled exactly once)
+is re-verified after re-planning.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import DATRET
+from repro.core.faults import (FaultInjector, FaultSpec, RecoveryPolicy,
+                               UnrecoverableFault, fault_expansion)
+from repro.core.node import TLNode
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.transport import Transport
+from repro.core.virtual_batch import NodeSegment, assert_exactly_once
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+DROP = FaultSpec(drop_prob=0.4, seed=11)
+STRAGGLE = FaultSpec(straggle_prob=0.6, straggle_factor=3.0, seed=11)
+
+
+def _build(sizes, *, fused=True, fault=None, replicas=True, pipelined=False,
+           seed=7, recovery=None):
+    """An orchestrator over uneven shards, optionally fault-injected, with
+    replica nodes holding bit-identical copies of each primary's shard."""
+    model = SmallModel(DATRET)
+    r = np.random.default_rng(seed)
+    data = [(r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+             r.integers(0, DATRET.n_classes, n)) for n in sizes]
+    nodes = [TLNode(i, model, x, y, jit_visits=fused)
+             for i, (x, y) in enumerate(data)]
+    reps = ({i: TLNode(100 + i, model, x, y, jit_visits=fused)
+             for i, (x, y) in enumerate(data)} if replicas else None)
+    tr = Transport(faults=FaultInjector(fault) if fault else None)
+    orch = TLOrchestrator(model, nodes, sgd(0.05), tr,
+                          batch_size=16, seed=0, fused=fused,
+                          pipelined=pipelined, replicas=reps,
+                          recovery=recovery or RecoveryPolicy(backoff_s=0.01),
+                          compute_time_fn=lambda k: 1e-4 * k,
+                          bp_time_fn=lambda n: 5e-4 * n)
+    orch.initialize(jax.random.PRNGKey(3))
+    return orch
+
+
+def _assert_bitequal(a, b):
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def _assert_stats_equal(sa, sb):
+    assert len(sa) == len(sb) >= 1
+    for x, y in zip(sa, sb):
+        assert x.loss == y.loss
+        assert x.acc == y.acc
+
+
+# ------------------------------------------------------- the acceptance grid
+@pytest.mark.parametrize("sizes", [[20, 12], [13, 8, 11]],
+                         ids=["2nodes-uneven", "3nodes-uneven"])
+@pytest.mark.parametrize("mode", ["drop", "straggle", "kill_resume"])
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "eager"])
+def test_lossless_under_faults_grid(fused, mode, sizes, tmp_path):
+    """{fused, eager} × {drop, straggle, kill+resume} × {2,3 uneven nodes}:
+    losses and params bit-equal to the fault-free run after recovery."""
+    clean = _build(sizes, fused=fused)
+    clean_stats = [s for _ in range(2) for s in clean.train_epoch()]
+
+    if mode == "kill_resume":
+        # run epoch 0 + one batch of epoch 1, checkpoint at the step
+        # boundary, 'kill', restore into a fresh orchestrator, finish
+        part = _build(sizes, fused=fused)
+        s0 = part.train_epoch()
+        s1 = part.train_epoch(max_batches=1)
+        part.save(str(tmp_path))
+        resumed = _build(sizes, fused=fused)
+        start = resumed.restore(str(tmp_path))
+        assert start == 1 and resumed.step == part.step
+        s2 = resumed.train_epoch(start_batch=start)
+        _assert_bitequal(clean.params, resumed.params)
+        _assert_stats_equal(clean_stats, s0 + s1 + s2)
+        return
+
+    fault = DROP if mode == "drop" else STRAGGLE
+    faulty = _build(sizes, fused=fused, fault=fault)
+    faulty_stats = [s for _ in range(2) for s in faulty.train_epoch()]
+
+    _assert_bitequal(clean.params, faulty.params)
+    _assert_stats_equal(clean_stats, faulty_stats)
+    # recovery must actually have happened, and be visible on the clock
+    assert faulty.transport.fault_log, "seeded spec injected no faults"
+    assert faulty.transport.clock_s > clean.transport.clock_s
+    if mode == "straggle":
+        # stragglers are slow, not lossy: byte accounting is untouched
+        assert faulty.transport.bytes_sent == clean.transport.bytes_sent
+    else:
+        # retries re-send payloads: bytes can only grow
+        assert faulty.transport.total_bytes > clean.transport.total_bytes
+
+
+def test_retry_wire_time_visible_without_backoff():
+    """The retried upload itself must advance the simulated clock even with
+    zero backoff and zero modeled compute: a segment's attempts are
+    sequential on the wire (Transport.chain), so a dropped attempt cannot
+    hide under the parallel window's max()."""
+    def build(fault):
+        model = SmallModel(DATRET)
+        r = np.random.default_rng(7)
+        data = [(r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+                 r.integers(0, DATRET.n_classes, n)) for n in [20, 12]]
+        nodes = [TLNode(i, model, x, y) for i, (x, y) in enumerate(data)]
+        reps = {i: TLNode(100 + i, model, x, y)
+                for i, (x, y) in enumerate(data)}
+        tr = Transport(faults=FaultInjector(fault) if fault else None)
+        orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=16,
+                              seed=0, replicas=reps,
+                              recovery=RecoveryPolicy())   # backoff_s=0
+        orch.initialize(jax.random.PRNGKey(3))
+        return orch
+
+    clean, faulty = build(None), build(DROP)
+    for _ in range(2):
+        clean.train_epoch()
+        faulty.train_epoch()
+    _assert_bitequal(clean.params, faulty.params)
+    assert any(e.kind == "drop" for e in faulty.transport.fault_log)
+    assert faulty.transport.clock_s > clean.transport.clock_s
+
+
+def test_pipelined_recovery_matches_serial():
+    """Fault recovery composes with the double-buffered epoch engine: the
+    seeded per-visit verdicts are order-independent, so the pipelined
+    faulty run recovers to the same bits as the serial faulty run and the
+    fault-free run."""
+    clean = _build([13, 8, 11])
+    serial = _build([13, 8, 11], fault=DROP)
+    piped = _build([13, 8, 11], fault=DROP, pipelined=True)
+    for _ in range(2):
+        clean.train_epoch()
+        serial.train_epoch()
+        piped.train_epoch()
+    _assert_bitequal(clean.params, serial.params)
+    _assert_bitequal(clean.params, piped.params)
+    # same faults were drawn on both paths (order-independence)
+    assert ([e.key for e in serial.transport.fault_log]
+            == [e.key for e in piped.transport.fault_log])
+    assert serial.transport.bytes_sent == piped.transport.bytes_sent
+
+
+def test_retried_bytes_accounted_exactly_once():
+    """The faulty run's activation bytes exceed the clean run's by exactly
+    the sum of the dropped attempts' payload bytes (window_log
+    ``fault:drop`` records) — retries are charged, successes are never
+    double-counted.  The only other growth is the failover model re-sends,
+    visible on the ``model`` tag."""
+    clean = _build([20, 12])
+    faulty = _build([20, 12], fault=DROP)
+    for _ in range(2):
+        clean.train_epoch()
+        faulty.train_epoch()
+    dropped = {}
+    for rec in faulty.transport.window_log:
+        if rec.kind == "fault:drop":
+            for tag, nb in rec.by_tag.items():
+                dropped[tag] = dropped.get(tag, 0) + nb
+    assert set(dropped) == {"activations_grads"}
+    assert (faulty.transport.bytes_sent["activations_grads"]
+            == clean.transport.bytes_sent["activations_grads"]
+            + dropped["activations_grads"])
+    # the model tag grows only by whole failover re-sends: one model
+    # payload per "failover" recovery event, nothing else
+    extra_model = (faulty.transport.bytes_sent["model"]
+                   - clean.transport.bytes_sent["model"])
+    failovers = sum(1 for e in faulty.fault_log if e.kind == "failover")
+    if failovers:
+        assert extra_model > 0 and extra_model % failovers == 0
+    else:
+        assert extra_model == 0
+
+
+def test_unrecoverable_without_replica():
+    """Exhausted retries with no replica must fail loudly, never assemble a
+    partial virtual batch."""
+    orch = _build([20, 12], fault=FaultSpec(drop_prob=0.95, seed=1),
+                  replicas=False)
+    with pytest.raises(UnrecoverableFault):
+        for _ in range(4):
+            orch.train_epoch()
+
+
+def test_replica_tried_even_when_failover_threshold_misconfigured():
+    """retries_before_failover > max_attempts must not strand a configured
+    replica: failover is taken as the last act before giving up, so a
+    'failover' event always precedes any UnrecoverableFault.  (A 2-attempt
+    budget can still legitimately exhaust if the replica's own attempts
+    drop — the guarantee is that the replica was *tried*.)"""
+    faulty = _build([20, 12], fault=DROP,
+                    recovery=RecoveryPolicy(max_attempts=2,
+                                            retries_before_failover=5))
+    try:
+        for _ in range(2):
+            faulty.train_epoch()
+    except UnrecoverableFault:
+        pass
+    assert any(e.kind == "failover" for e in faulty.fault_log)
+
+
+def test_eviction_replans_mid_epoch():
+    """A node whose failures reach evict_after is evicted: later segments
+    route straight to the replica (no retry burn on the dead primary), and
+    training still matches the fault-free bits."""
+    clean = _build([20, 12])
+    # a brutal 0.7 drop rate needs a deep retry budget: the replica's own
+    # attempts are faulty too, and 0.7^8 per-segment exhaustion odds would
+    # make the default max_attempts flaky by design
+    faulty = _build([20, 12], fault=FaultSpec(drop_prob=0.7, seed=3),
+                    recovery=RecoveryPolicy(max_attempts=64, backoff_s=0.01))
+    for _ in range(2):
+        clean.train_epoch()
+        faulty.train_epoch()
+    _assert_bitequal(clean.params, faulty.params)
+    assert any(e.kind == "evict" for e in faulty.fault_log)
+    assert any(h.evicted for h in faulty._health.values())
+
+
+@pytest.mark.parametrize("pipelined", [False, True],
+                         ids=["serial", "pipelined"])
+def test_cached_mode_recovery_spans_epochs(pipelined):
+    """§5.2 model caching + faults: an evicted primary's replica must
+    receive the *epoch-start* parameters at the next epoch's distribution
+    (not keep the params from the failover that evicted the primary), so
+    cached-mode recovery stays bit-equal to the fault-free cached run."""
+    def build(fault):
+        model = SmallModel(DATRET)
+        r = np.random.default_rng(7)
+        data = [(r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+                 r.integers(0, DATRET.n_classes, n)) for n in [20, 12]]
+        nodes = [TLNode(i, model, x, y) for i, (x, y) in enumerate(data)]
+        reps = {i: TLNode(100 + i, model, x, y)
+                for i, (x, y) in enumerate(data)}
+        tr = Transport(faults=FaultInjector(fault) if fault else None)
+        orch = TLOrchestrator(
+            model, nodes, sgd(0.05), tr, batch_size=16, seed=0,
+            cache_model_per_epoch=True, pipelined=pipelined, replicas=reps,
+            recovery=RecoveryPolicy(max_attempts=64, evict_after=2,
+                                    backoff_s=0.01))
+        orch.initialize(jax.random.PRNGKey(3))
+        return orch
+
+    clean = build(None)
+    faulty = build(FaultSpec(drop_prob=0.7, seed=3))
+    for _ in range(3):
+        clean.train_epoch()
+        faulty.train_epoch()
+    assert any(e.kind == "evict" for e in faulty.fault_log)
+    _assert_bitequal(clean.params, faulty.params)
+
+
+def test_fault_decisions_are_order_independent():
+    """The injector's verdict is a pure function of (seed, key): identical
+    across repeated queries and across differently-ordered query streams;
+    the attempt index is part of the key so retries get fresh draws."""
+    inj = FaultInjector(FaultSpec(drop_prob=0.5, straggle_prob=0.3,
+                                  straggle_factor=2.0, seed=42))
+    keys = [(e, b, n, a) for e in range(3) for b in range(3)
+            for n in range(3) for a in range(3)]
+    fwd = [inj.decide(k).kind for k in keys]
+    rev = [inj.decide(k).kind for k in reversed(keys)]
+    assert fwd == list(reversed(rev))
+    assert {"ok", "drop"} <= set(fwd)           # both outcomes occur
+    # fresh injector, same spec -> same stream
+    again = FaultInjector(FaultSpec(drop_prob=0.5, straggle_prob=0.3,
+                                    straggle_factor=2.0, seed=42))
+    assert fwd == [again.decide(k).kind for k in keys]
+
+
+def test_exactly_once_assertion_catches_corruption():
+    seg = NodeSegment(0, np.arange(4), np.arange(4))
+    assert_exactly_once(4, [seg])               # clean partition passes
+    dup = NodeSegment(1, np.arange(4), np.array([3, 4, 5, 3]))
+    with pytest.raises(RuntimeError, match="exactly once"):
+        assert_exactly_once(8, [seg, dup])
+    with pytest.raises(RuntimeError, match="lost or duplicated"):
+        assert_exactly_once(8, [seg])
+
+
+def test_async_tl_survives_faults():
+    """The async (§3.4) path retries dropped visits within the recovery
+    budget and skips persistently-failing contributions instead of dying —
+    async mode trades exactness for liveness by design."""
+    from repro.core.async_tl import async_train_epoch
+
+    orch = _build([20, 12], fault=FaultSpec(drop_prob=0.4, seed=5),
+                  replicas=False)
+    stats, tracker = async_train_epoch(orch)
+    assert stats, "async epoch produced no updates under faults"
+    assert all(np.isfinite(s.loss) for s in stats)
+    assert orch.transport.fault_log      # faults actually fired
+
+
+def test_fault_expansion_closed_form():
+    assert fault_expansion() == 1.0
+    assert abs(fault_expansion(drop_prob=0.5) - 2.0) < 1e-12
+    assert abs(fault_expansion(straggle_prob=0.5, straggle_factor=3.0)
+               - 2.0) < 1e-12
+    # monotone in each knob
+    assert (fault_expansion(0.3, 0.5, 4.0)
+            > fault_expansion(0.1, 0.5, 4.0)
+            > fault_expansion(0.1, 0.2, 4.0)
+            > fault_expansion() )
+
+
+# ------------------------------------------------- engine checkpoint/resume
+def _prod_engine(cfg, model, mesh, shape, **kw):
+    from repro.launch.engine import Engine
+    from repro.optim import adamw
+    eng = Engine(model, cfg, adamw(3e-3, clip_norm=1.0), mesh, shape, **kw)
+    return eng
+
+
+def test_engine_production_kill_resume(tmp_path):
+    """Production engine: a run killed after a step-boundary checkpoint
+    resumes via ``Engine.restore`` and finishes bit-identical to an
+    uninterrupted run (the loader tail is a pure function of its seed)."""
+    from repro.configs import get_config
+    from repro.data.pipeline import (VirtualBatchLoader, shard_corpus,
+                                     synthetic_corpus)
+    from repro.launch.mesh import make_debug_mesh
+    from repro.models import build_model
+    from repro.configs.base import InputShape
+
+    cfg = get_config("deepseek-7b", reduced=True)
+    model = build_model(cfg)
+    mesh = make_debug_mesh(1, 1)
+    shape = InputShape("t", 32, 8, "train")
+
+    def loader():
+        docs = synthetic_corpus(64, 32, cfg.vocab_size, seed=1)
+        return VirtualBatchLoader(shard_corpus(docs, 4), 8, seed=0)
+
+    full = _prod_engine(cfg, model, mesh, shape)
+    full.init(jax.random.PRNGKey(0))
+    ra = full.run(loader(), steps=6)
+
+    killed = _prod_engine(cfg, model, mesh, shape,
+                          ckpt_dir=str(tmp_path), ckpt_every=3)
+    killed.init(jax.random.PRNGKey(0))
+    killed.run(loader(), steps=3)                 # dies at the boundary
+
+    resumed = _prod_engine(cfg, model, mesh, shape, ckpt_dir=str(tmp_path))
+    assert resumed.restore() == 3
+    # a budget at/behind the resume cursor fails loudly AND keeps the
+    # cursor armed: the retried run below must still resume at step 3,
+    # never silently replay batches 0-2 onto the restored params
+    with pytest.raises(ValueError, match="nothing to run"):
+        resumed.run(loader(), steps=3)
+    rc = resumed.run(loader(), steps=6)           # global budget: runs 3
+    assert rc.steps == 3
+    _assert_bitequal(ra.params, rc.params)
+    np.testing.assert_array_equal(ra.losses[3:], rc.losses)
+
+
+def test_engine_sim_kill_resume(tmp_path):
+    """Sim-mode engine: epoch-boundary checkpoints + lazy restore give the
+    same bits as an uninterrupted sim run."""
+    from repro.core.baselines import ShardData
+    from repro.launch.engine import Engine
+
+    r = np.random.default_rng(5)
+    shards = [ShardData(
+        r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+        r.integers(0, DATRET.n_classes, n)) for n in [20, 12]]
+    model = SmallModel(DATRET)
+
+    full = Engine(model, DATRET, sgd(0.05), mode="sim", batch_size=16,
+                  seed=0)
+    rf = full.run(shards, epochs=3)
+
+    part = Engine(model, DATRET, sgd(0.05), mode="sim", batch_size=16,
+                  seed=0, ckpt_dir=str(tmp_path))
+    part.run(shards, epochs=2)                    # saved at epoch boundary
+
+    res = Engine(model, DATRET, sgd(0.05), mode="sim", batch_size=16,
+                 seed=0, ckpt_dir=str(tmp_path))
+    res.restore()
+    rr = res.run(shards, epochs=1)
+    _assert_bitequal(rf.params, rr.params)
+    np.testing.assert_array_equal(rf.losses[-rr.steps:], rr.losses)

@@ -4,10 +4,9 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.analysis.hlo_flops import _shape_elems_bytes, parse_module
+from repro.analysis.hlo_flops import _shape_elems_bytes
 from repro.analysis.roofline import collective_bytes, shape_bytes
 from repro.configs import get_config
 from repro.models import moe as moe_mod

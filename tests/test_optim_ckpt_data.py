@@ -1,5 +1,4 @@
 """Substrates: optimizers, checkpointing round-trip, data pipeline."""
-import os
 
 import jax
 import jax.numpy as jnp

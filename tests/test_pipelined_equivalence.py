@@ -14,7 +14,6 @@ single-sample shard, donated buffers under prefetch) carries the ``slow``
 marker and is skipped by the tier-1 run.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -4,7 +4,6 @@ produce valid specs for every arch's param tree.
 
 Runs in a subprocess so the forced device count never leaks into other tests.
 """
-import json
 import os
 import subprocess
 import sys

@@ -1,8 +1,10 @@
-"""Transport byte accounting, compression, parallel windows, runtime model."""
+"""Transport byte accounting, compression, parallel windows, fault lanes,
+runtime model."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.faults import FaultInjector, FaultSpec, VisitDropped
 from repro.core.runtime_model import (WorkloadSpec, runtime_fl, runtime_sfl,
                                       runtime_sl, runtime_slp, runtime_tl)
 from repro.core.transport import NetworkModel, Transport, payload_bytes
@@ -106,6 +108,87 @@ def test_pipelined_epoch_same_bytes_smaller_clock():
     assert piped.transport.clock_s < serial.transport.clock_s
 
 
+# ------------------------------------------------------------- fault lanes
+def _mb_transport(**kw):
+    return Transport(network=NetworkModel(bandwidth_bytes_per_s=1e6,
+                                          rtt_s=0.0), **kw)
+
+
+def _first_key(injector, kind, attempts=2000):
+    """A key whose seeded verdict is ``kind`` (deterministic hunt)."""
+    for a in range(attempts):
+        if injector.decide((0, 0, 0, a)).kind == kind:
+            return (0, 0, 0, a)
+    raise AssertionError(f"no {kind} verdict in {attempts} keys")
+
+
+def test_fault_lane_straggle_multiplies_clock_never_bytes():
+    inj = FaultInjector(FaultSpec(straggle_prob=1.0, straggle_factor=3.0))
+    tr = _mb_transport(faults=inj)
+    with tr.fault_lane((0, 0, 0, 0)) as out:
+        assert out.kind == "straggle"
+        tr.send("a", jnp.zeros((250_000,), jnp.float32))     # 1.0 s base
+        tr.tick(0.5)                                         # compute slows too
+    assert abs(tr.clock_s - 3.0 * 1.5) < 1e-9
+    assert tr.bytes_sent["a"] == 1_000_000                   # bytes untouched
+    rec = tr.window_log[-1]
+    assert rec.kind == "fault:straggle" and rec.meta["factor"] == 3.0
+    assert rec.nbytes == 1_000_000 and abs(rec.clock_s - 4.5) < 1e-9
+
+
+def test_fault_lane_drop_charges_then_raises():
+    """A dropped attempt is charged (the payload burned wire time before it
+    was lost) and raises at lane exit; the window_log fault record carries
+    exactly the wasted bytes/clock."""
+    inj = FaultInjector(FaultSpec(drop_prob=0.9, seed=7))
+    tr = _mb_transport(faults=inj)
+    key = _first_key(inj, "drop")
+    with pytest.raises(VisitDropped):
+        with tr.fault_lane(key):
+            tr.send("t", jnp.zeros((250_000,), jnp.float32))
+    assert tr.bytes_sent["t"] == 1_000_000
+    assert abs(tr.clock_s - 1.0) < 1e-9
+    rec = tr.window_log[-1]
+    assert rec.kind == "fault:drop" and rec.by_tag == {"t": 1_000_000}
+    assert tr.fault_log[-1].key == key and tr.fault_log[-1].nbytes == 1_000_000
+
+
+def test_retry_bytes_grow_by_exactly_the_retried_payload():
+    """The satellite invariant: after a retry loop, total bytes equal the
+    clean send plus one payload per dropped attempt — derivable from
+    window_log, never silently double-counted."""
+    payload = jnp.zeros((1000,), jnp.float32)                # 4000 B
+    clean = _mb_transport()
+    clean.send("t", payload)
+
+    inj = FaultInjector(FaultSpec(drop_prob=0.6, seed=5))  # drops twice, then ok
+    tr = _mb_transport(faults=inj)
+    attempts = 0
+    while True:
+        try:
+            with tr.fault_lane((0, 0, 0, attempts)):
+                tr.send("t", payload)
+            break
+        except VisitDropped:
+            attempts += 1
+    drops = [r for r in tr.window_log if r.kind == "fault:drop"]
+    assert len(drops) == attempts == 2
+    assert tr.bytes_sent["t"] == clean.bytes_sent["t"] * (attempts + 1)
+    assert (tr.bytes_sent["t"]
+            == clean.bytes_sent["t"] + sum(r.nbytes for r in drops))
+    # every attempt's transfer also advanced the clock
+    assert abs(tr.clock_s - (attempts + 1) * clean.clock_s) < 1e-9
+
+
+def test_fault_lane_passthrough_without_injector():
+    tr = _mb_transport()
+    with tr.fault_lane((0, 0, 0, 0)) as out:
+        tr.send("a", jnp.zeros((250_000,), jnp.float32))
+    assert out.kind == "ok"
+    assert tr.window_log == [] and tr.fault_log == []
+    assert abs(tr.clock_s - 1.0) < 1e-9
+
+
 def test_compression_reduces_bytes():
     tr_plain = Transport()
     tr_comp = Transport(compress_activations=True)
@@ -149,6 +232,23 @@ def test_tl_compression_and_caching_help(spec):
     c2 = runtime_tl(spec, cache_model=True, pipelined=False)
     k2 = runtime_tl(spec, cache_model=True, compressed=True, pipelined=False)
     assert k2 < c2 < b2
+
+
+def test_runtime_tl_fault_knobs_expand_the_clock(spec):
+    """Eq. 19 with the fault-expansion multiplier: faults can only slow the
+    round down, and only through the visit phase (client + wire) — the
+    orchestrator BP term is untouched, so expansion is sub-linear in the
+    round total."""
+    base = runtime_tl(spec, pipelined=False)
+    dropped = runtime_tl(spec, pipelined=False, drop_prob=0.25)
+    straggled = runtime_tl(spec, pipelined=False,
+                           straggle_prob=0.5, straggle_factor=4.0)
+    both = runtime_tl(spec, pipelined=False, drop_prob=0.25,
+                      straggle_prob=0.5, straggle_factor=4.0)
+    assert base < dropped < both and base < straggled < both
+    # the BP/server term is fault-free: total grows slower than the raw
+    # expansion factor (here 1/(1-0.25) = 4/3)
+    assert dropped < base * (4 / 3)
 
 
 def test_sl_scales_linearly_with_nodes(spec):

@@ -6,7 +6,6 @@ at most once per epoch, (c) order traversal segments by first appearance,
 (d) partition the batch's positions exactly.
 """
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.virtual_batch import (IndexRange, create_virtual_batches,
