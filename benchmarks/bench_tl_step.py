@@ -41,7 +41,13 @@ with 8 forced host devices, the (4, 2) host mesh):
 * ``engine_clock`` — serial (strictly batch-serial, the historical driver
   semantics) vs pipelined (2-deep host->device prefetch) engine wall-clock
   over the same compiled step at 2/4/8 logical nodes — the device-path
-  counterpart of the simulator's ``clock_s`` columns.
+  counterpart of the simulator's ``clock_s`` columns;
+* ``elastic_recovery`` — the elastic engine's full detect -> reshrink ->
+  restore -> re-jit -> replay recovery wall-clock (a scripted chip kill at
+  step 3) at 2/4/8 simulated devices, at rollback depth 1 (``ckpt_every=2``)
+  vs depth 3 (``ckpt_every=4``, only the step-0 anchor behind the kill) —
+  the measured counterpart of ``runtime_model.recovery_cost``; re-jit for
+  the shrunken mesh dominates, replay scales with rollback depth.
 
 ``BENCH_tl_step.json`` at the repo root is the repo's step-time perf
 *trajectory*: a list of runs keyed by git rev, appended to (never
@@ -246,27 +252,97 @@ _PRODUCTION_SCRIPT = textwrap.dedent("""
             "serial_wall_s": round(serial, 4),
             "pipelined_wall_s": round(piped, 4),
             "overlap_gain": round(serial / piped, 3)}
+
     print("RESULT", json.dumps({"production_dryrun": dryrun,
                                 "engine_clock": clocks}))
 """)
 
+# The elastic-recovery measurement runs in its OWN subprocess, with the
+# persistent compilation cache left OFF: the recovery path re-jits the same
+# step across shrinking meshes, and jax 0.4.37's CPU persistent-cache
+# serialization corrupts the heap on that pattern (glibc "corrupted
+# double-linked list" abort inside the first recovery re-jit when
+# jax_compilation_cache_dir is set; clean without it).  Keeping it separate
+# also means a crash here degrades to an `elastic_error` column instead of
+# taking the dryrun/engine-clock columns down with it.
+_ELASTIC_SCRIPT = textwrap.dedent("""
+    import dataclasses, json, os, tempfile, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.data.pipeline import (VirtualBatchLoader, shard_corpus,
+                                     synthetic_corpus)
+    from repro.launch.elastic import KILL, DeviceFaultSpec, Drill
+    from repro.launch.engine import Engine
+    from repro.models import build_model
+    from repro.optim import adamw
 
-def _production_columns() -> dict:
-    """Run the production-path measurements in a subprocess (the forced
-    8-device count must never leak into this process's jax)."""
+    # ---- elastic recovery: detect -> reshrink -> restore -> replay ------
+    # A scripted chip kill at step 3 on (1,2)/(2,2)/(4,2) meshes over the
+    # first 2/4/8 forced host devices; the engine's RecoveryReport is the
+    # measurement.  ckpt_every=2 puts a checkpoint at step 2 (rollback
+    # depth 1); ckpt_every=4 leaves only the step-0 anchor (depth 3) — the
+    # depth axis of runtime_model.recovery_cost.
+    cfg = get_config("deepseek-7b", reduced=True)
+    ecfg = dataclasses.replace(cfg, name="engine-clock", n_layers=1,
+                               d_model=128, n_heads=2, n_kv_heads=2,
+                               d_ff=256, vocab_size=256)
+    emodel = build_model(ecfg)
+    EB, ES = 8, 32
+    devs = jax.devices()
+    docs_e = synthetic_corpus(2 * 64, ES, ecfg.vocab_size, seed=1)
+    vbl = VirtualBatchLoader(shard_corpus(docs_e, 2), EB, seed=0)
+    elastic = {}
+    for n in (2, 4, 8):
+        mesh_n = jax.sharding.Mesh(
+            np.array(devs[:n]).reshape(n // 2, 2), ("data", "model"))
+        per_cadence = {}
+        for ckpt_every in (2, 4):
+            eng_e = Engine(
+                emodel, ecfg, adamw(3e-4, clip_norm=1.0), mesh_n,
+                InputShape("bench", ES, EB, "train"),
+                ckpt_dir=tempfile.mkdtemp(), ckpt_every=ckpt_every,
+                elastic=True, watchdog_s=300.0,
+                device_faults=DeviceFaultSpec(
+                    drills=(Drill(KILL, 3, devs[0].id),)))
+            eng_e.init(jax.random.PRNGKey(0))
+            res = eng_e.run(vbl, steps=5)
+            rec = res.recovery[0].as_dict()
+            rec["n_devices"] = n
+            per_cadence[f"ckpt_every_{ckpt_every}"] = rec
+        elastic[str(n)] = per_cadence
+
+    print("RESULT", json.dumps({"elastic_recovery": elastic}))
+""")
+
+
+def _run_result_script(script: str, error_key: str, timeout_s: int) -> dict:
+    """Run one measurement subprocess; degrade to an ``{error_key: ...}``
+    column on timeout/crash so the columns already computed this run still
+    reach the trajectory."""
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO_ROOT, "src"))
     try:
-        proc = subprocess.run([sys.executable, "-c", _PRODUCTION_SCRIPT],
+        proc = subprocess.run([sys.executable, "-c", script],
                               env=env, capture_output=True, text=True,
-                              timeout=900)
+                              timeout=timeout_s)
     except subprocess.TimeoutExpired:
-        # degrade like a failing subprocess: the simulator columns already
-        # computed this run must still reach the trajectory
-        return {"production_error": "production subprocess timed out (900s)"}
+        return {error_key: f"subprocess timed out ({timeout_s}s)"}
     if proc.returncode != 0:
-        return {"production_error": proc.stderr[-2000:]}
+        return {error_key: proc.stderr[-2000:]}
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
-    out = json.loads(line.split("RESULT ")[1])
+    return json.loads(line.split("RESULT ")[1])
+
+
+def _production_columns() -> dict:
+    """Run the production-path measurements in subprocesses (the forced
+    8-device count must never leak into this process's jax; the elastic
+    drill additionally needs the persistent compilation cache off — see
+    ``_ELASTIC_SCRIPT``)."""
+    out = _run_result_script(_PRODUCTION_SCRIPT, "production_error", 1500)
+    out.update(_run_result_script(_ELASTIC_SCRIPT, "elastic_error", 900))
+    if "production_error" in out:
+        return out
     d = out["production_dryrun"]
     print(f"bench_tl_step/production_dryrun,"
           f"{d['step_time_s_cpu'] * 1e6:.0f},"
@@ -275,6 +351,12 @@ def _production_columns() -> dict:
         print(f"bench_tl_step/engine_nodes={n},"
               f"{c['pipelined_wall_s'] * 1e6:.0f},"
               f"overlap_gain={c['overlap_gain']}x")
+    for n, cad in out.get("elastic_recovery", {}).items():
+        for name, rec in cad.items():
+            print(f"bench_tl_step/elastic_devices={n}/{name},"
+                  f"{rec['total_s'] * 1e6:.0f},"
+                  f"depth={rec['rollback_depth']},"
+                  f"rejit={rec['rejit_s']:.2f}s")
     return out
 
 

@@ -1,14 +1,35 @@
 """Pytree checkpointing: npz payload + json treedef, atomic, step-indexed.
 
 Layout:  <dir>/step_<N>/arrays.npz + meta.json
+
+Integrity + durability (the elastic engine's rollback anchor):
+
+* every array's SHA-256 goes into ``meta.json`` at save time and is
+  re-verified on restore — a bit-flipped or truncated payload can never be
+  silently trained on;
+* the npz and meta files are fsync'd (and the directory entries flushed)
+  *before* the atomic rename publishes the step, so a host crash between
+  save and rename leaves either the previous step or a complete new one,
+  never a half-written directory with a valid name;
+* a corrupt or truncated ``step_N`` directory (missing ``arrays.npz``,
+  checksum mismatch, unreadable meta) is *skipped with a warning* by
+  :func:`latest_step` / :func:`load_checkpoint`'s latest-step resolution,
+  which fall back to the newest **valid** step instead of crashing — a
+  partially-destroyed checkpoint directory degrades the rollback depth, not
+  the recovery itself;
+* :func:`gc_checkpoints` bounds the directory's growth for long elastic
+  runs (``--ckpt-keep``), never collecting protected steps (the one a live
+  resume depends on).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import tempfile
-from typing import Any, Optional, Tuple
+import warnings
+from typing import Any, Iterable, Optional, Tuple
 
 import jax
 import numpy as np
@@ -49,52 +70,166 @@ def _from_savable(arr: np.ndarray, dtype_name: str):
     return arr
 
 
+def _sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _fsync_file(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str):
+    # directory fsync flushes the entry metadata (the rename itself);
+    # not all filesystems allow it — degrade silently rather than fail a save
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = None):
     os.makedirs(ckpt_dir, exist_ok=True)
     names, leaves = _flatten_with_names(tree)
     tmp = tempfile.mkdtemp(dir=ckpt_dir)
     try:
         savable = [_to_savable(l) for l in leaves]
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{f"a{i}": a for i, (a, _) in enumerate(savable)})
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **{f"a{i}": a for i, (a, _) in enumerate(savable)})
         meta = {"step": step, "names": names,
                 "dtypes": [d for _, d in savable],
+                "checksums": [_sha256(a) for a, _ in savable],
                 "extra": extra or {}}
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
+        meta_path = os.path.join(tmp, "meta.json")
+        with open(meta_path, "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # durability before visibility: payload + meta bytes must be on disk
+        # before the atomic rename publishes the step name
+        _fsync_file(npz_path)
+        _fsync_dir(tmp)
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(ckpt_dir)
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
     return os.path.join(ckpt_dir, f"step_{step:08d}")
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _all_steps(ckpt_dir: str):
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_"):
+            try:
+                out.append(int(d.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+    return sorted(out)
+
+
+def verify_checkpoint(path: str) -> bool:
+    """True iff ``path`` holds a complete, uncorrupted checkpoint.
+
+    Checks: meta.json parses with the expected keys, arrays.npz exists and
+    loads, every named array is present, and (when the meta carries them —
+    pre-checksum checkpoints stay loadable) each array's SHA-256 matches.
+    """
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        names = meta["names"]
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            arrays = [data[f"a{i}"] for i in range(len(names))]
+        sums = meta.get("checksums")
+        if sums is not None:
+            if len(sums) != len(arrays):
+                return False
+            for want, arr in zip(sums, arrays):
+                if _sha256(arr) != want:
+                    return False
+        return True
+    except Exception:
+        return False
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *valid* step: corrupt/truncated step dirs are skipped with a
+    warning (a crash mid-write or a damaged disk must degrade the rollback
+    depth, not kill the restore)."""
+    for step in reversed(_all_steps(ckpt_dir)):
+        path = _step_path(ckpt_dir, step)
+        if verify_checkpoint(path):
+            return step
+        warnings.warn(f"skipping corrupt/truncated checkpoint {path}; "
+                      "falling back to the previous step")
+    return None
+
+
+def gc_checkpoints(ckpt_dir: str, keep: int,
+                   protect: Iterable[int] = ()) -> list:
+    """Retain the ``keep`` newest **valid** steps; returns deleted steps.
+
+    Corrupt/truncated step dirs never count against the retention window
+    (keeping a damaged step while collecting the newest restorable one
+    would destroy the rollback anchor) and are themselves collected.  Steps
+    in ``protect`` (e.g. the one a live resume replays from) are never
+    collected, even when older than the retention window."""
+    if keep < 1:
+        raise ValueError("keep must be >= 1")
+    steps = _all_steps(ckpt_dir)
+    valid = [s for s in steps if verify_checkpoint(_step_path(ckpt_dir, s))]
+    keep_set = set(valid[-keep:]) | set(int(s) for s in protect)
+    doomed = [s for s in steps if s not in keep_set]
+    for s in doomed:
+        shutil.rmtree(_step_path(ckpt_dir, s), ignore_errors=True)
+    return doomed
 
 
 def load_checkpoint(ckpt_dir: str, tree_like, step: Optional[int] = None
                     ) -> Tuple[Any, dict]:
-    """Restore into the structure of ``tree_like`` (names must match)."""
+    """Restore into the structure of ``tree_like`` (names must match).
+
+    ``step=None`` resolves to the newest valid step (corrupt dirs skipped,
+    see :func:`latest_step`).  An *explicitly requested* step that fails
+    verification raises — the caller named a specific rollback point and
+    silently substituting another would break the bit-equality contract.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+            raise FileNotFoundError(f"no (valid) checkpoints under {ckpt_dir}")
+    path = _step_path(ckpt_dir, step)
+    if not verify_checkpoint(path):
+        raise ValueError(
+            f"checkpoint {path} is corrupt or truncated (missing payload or "
+            "SHA-256 mismatch); pass step=None to fall back to the newest "
+            "valid step")
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
     names_now, _ = _flatten_with_names(tree_like)
     if names_now != meta["names"]:
         raise ValueError("checkpoint tree structure mismatch")
-    leaves = [_from_savable(data[f"a{i}"], meta["dtypes"][i])
-              for i in range(len(meta["names"]))]
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        leaves = [_from_savable(data[f"a{i}"], meta["dtypes"][i])
+                  for i in range(len(meta["names"]))]
     treedef = jax.tree_util.tree_structure(tree_like)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -144,5 +144,48 @@ def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
     return t_client + t_cb + (n_batches - 1) * max(t_cb, t_sb) + t_sb
 
 
+def recovery_cost(step_time_s: float, rollback_depth: int, rejit_s: float,
+                  *, restore_s: float = 0.0, detect_s: float = 0.0,
+                  replay_s: float = 0.0) -> float:
+    """Wall-clock cost of one elastic device-loss recovery.
+
+    The elastic engine (``repro.launch.engine``) pays, per recovery:
+    re-running the ``rollback_depth`` steps lost since the newest
+    checkpoint (at the steady-state ``step_time_s`` clock), re-jitting the
+    step for the reshrunk mesh (``rejit_s``, the dominant fixed cost), and
+    the smaller detect/restore/replay terms its :class:`~repro.launch
+    .elastic.RecoveryReport` measures.  Depth is bounded by
+    ``ckpt_every - 1``, which is the knob this term exists to size: the
+    checkpoint cadence trades steady-state save overhead against
+    per-recovery replay."""
+    if rollback_depth < 0:
+        raise ValueError("rollback_depth must be >= 0")
+    return (rollback_depth * step_time_s + rejit_s + restore_s + detect_s
+            + replay_s)
+
+
+def expected_recovery_overhead(step_time_s: float, *, loss_prob: float,
+                               ckpt_every: int, rejit_s: float,
+                               restore_s: float = 0.0) -> float:
+    """Expected per-step overhead of elastic recovery under a per-step
+    device-loss probability.
+
+    Each step loses a device with probability ``loss_prob``; the expected
+    rollback depth at a uniformly-random loss point is
+    ``(ckpt_every - 1) / 2``.  Returns seconds of expected extra wall-clock
+    per step — add to the eq. 15-19 step clock for a fault-adjusted
+    projection (the chip-fault analogue of ``fault_expansion``'s WAN
+    term)."""
+    if not 0.0 <= loss_prob < 1.0:
+        raise ValueError("loss_prob must be in [0, 1)")
+    if ckpt_every < 1:
+        raise ValueError("ckpt_every must be >= 1")
+    mean_depth = (ckpt_every - 1) / 2.0
+    per_recovery = recovery_cost(step_time_s, 0, rejit_s,
+                                 restore_s=restore_s) \
+        + mean_depth * step_time_s
+    return loss_prob * per_recovery
+
+
 ALL = {"FL": runtime_fl, "SL": runtime_sl, "SL+": runtime_slp,
        "SFL": runtime_sfl, "TL": runtime_tl}

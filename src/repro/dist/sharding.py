@@ -96,6 +96,26 @@ def _filter_divisible(spec, shape, sizes: Optional[Dict[str, int]]):
     return P(*out)
 
 
+def spec_divisible(shape, spec, mesh) -> bool:
+    """True iff ``spec`` materializes on ``mesh`` for an array of ``shape``:
+    every non-None entry's mesh-axis product divides its dim exactly.
+
+    This is the commit criterion the elastic reshrink planner
+    (``repro.launch.mesh.validate_param_divisibility``) checks before
+    re-sharding onto a shrunken mesh — ``param_pspec`` *filters*
+    non-dividing axes silently (the right behavior when choosing a layout),
+    but a reshrink must instead *refuse* a mesh whose layout contract the
+    sharding layer couldn't honor."""
+    sizes = _mesh_sizes(mesh) if not isinstance(mesh, dict) else mesh
+    for dim, entry in zip(shape, tuple(spec)):
+        if entry is None:
+            continue
+        n = _axes_size(entry, sizes)
+        if n is None or n == 0 or dim % n != 0:
+            return False
+    return True
+
+
 def _path_names(path) -> Tuple[str, ...]:
     return tuple(str(getattr(e, "key", getattr(e, "idx", e))) for e in path)
 

@@ -54,6 +54,34 @@ Equivalence guarantees (enforced by ``tests/test_engine.py``):
   bit-for-bit) on every mesh;
 * simulator ``pipeline=True`` is the lossless reordering proven by
   ``tests/test_pipelined_equivalence.py``.
+
+**Elastic mode** (``elastic=True``, production only) wraps the pjit path in
+a supervision loop that turns a lost chip from a fatal crash into a
+bounded-cost recovery: ``device_faults`` (a
+``repro.launch.elastic.DeviceFaultInjector``) injects seeded/scripted chip
+kills and hung collectives at the host boundary, every step is issued under
+a ``watchdog_s`` deadline (a hung collective is *classified* as a lost
+device instead of stalling forever), and on detection the engine
+
+1. re-factorizes the mesh over the surviving devices
+   (``launch.mesh.plan_reshrink`` — data axis degrades first, validated
+   against ``param_specs`` divisibility),
+2. rolls back to the newest valid checkpoint (``ckpt_dir`` is therefore
+   required; a step-0 anchor is written before the first step),
+3. re-shards params/opt_state onto the new mesh's ``NamedSharding``\\ s and
+   re-jits the step,
+4. replays the loader deterministically to the rollback step and resumes.
+
+The recovery guarantee is exact: post-recovery training on the shrunken
+mesh is **bit-equal** to a fresh run launched from that checkpoint on that
+mesh (``tests/test_elastic.py``) — the loader is a pure function of its
+seed and every replayed batch flows through the same re-jitted step.
+Without ``elastic=True`` an armed injector still detects (kill raises,
+the watchdog still fires within its deadline) but the ``DeviceLost``
+propagates as a loud failure instead of recovering.  Each recovery's
+detect/plan/restore/rejit/replay cost lands in ``Engine.recovery_log``
+(the ``elastic_recovery`` benchmark column and the
+``runtime_model.recovery_cost`` term measure exactly this).
 """
 from __future__ import annotations
 
@@ -69,6 +97,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.tl_step import make_train_step, train_shardings
 from repro.dist.sharding import tokens_pspec
+from repro.launch.elastic import (HANG, DeviceFaultInjector, DeviceFaultSpec,
+                                  DeviceLost, RecoveryReport, WatchdogTimeout,
+                                  call_with_deadline, simulate_hang)
 
 
 @dataclass
@@ -82,6 +113,7 @@ class EngineResult:
     opt_state: Any = None
     stats: Optional[List] = None          # sim mode: flat StepStats list
     epoch_stats: Optional[List[List]] = None
+    recovery: Optional[List] = None       # elastic mode: RecoveryReports
 
     @property
     def steps_per_s(self) -> float:
@@ -111,6 +143,8 @@ class Engine:
                  microbatch: int = 1, log_every: int = 0,
                  reassembly: str = "none",
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 ckpt_keep: int = 0, elastic: bool = False,
+                 device_faults=None, watchdog_s: float = 60.0,
                  batch_size: int = 64, transport=None, fused: bool = True,
                  cache_model_per_epoch: bool = False, seed: int = 0):
         if mode not in ("production", "sim"):
@@ -119,6 +153,12 @@ class Engine:
             raise ValueError("production mode needs a mesh and an InputShape")
         if reassembly not in ("none", "xla", "pallas"):
             raise ValueError(f"unknown reassembly strategy: {reassembly!r}")
+        if elastic and mode != "production":
+            raise ValueError("elastic mode is production-only")
+        if elastic and not ckpt_dir:
+            raise ValueError(
+                "elastic mode needs a ckpt_dir: the newest checkpoint is the "
+                "rollback anchor every recovery restores from")
         self.model = model
         self.cfg = cfg
         self.opt = opt
@@ -143,6 +183,28 @@ class Engine:
         # killed run resumes ULP-identically (tests/test_faults.py)
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
+        # ckpt_keep > 0 bounds the checkpoint dir: after every save the GC
+        # retains the `keep` newest valid steps (repro.checkpoint
+        # .gc_checkpoints) — never the step a live resume/rollback depends on
+        self.ckpt_keep = ckpt_keep
+        # ----- elastic supervision (see module docstring + launch.elastic)
+        self.elastic = elastic
+        if isinstance(device_faults, DeviceFaultSpec):
+            device_faults = DeviceFaultInjector(device_faults)
+        self.device_faults = device_faults
+        self.watchdog_s = watchdog_s
+        self.recovery_log: List[RecoveryReport] = []
+        # a deterministic drill would re-fire every time the replay revisits
+        # its step — fire each (step, device, kind) verdict at most once so
+        # every recovery makes monotone progress
+        self._fired_faults = set()
+        self._protect_steps = set()
+        # the watchdog deadline models the *steady-state* step clock; the
+        # first step after every (re-)jit also pays an unbounded compile, so
+        # it runs unsupervised and the deadline arms from the next step
+        self._jit_warm = False
+        self._loss_acc = {}            # step -> device loss (replays overwrite)
+        self._pending_report = None    # RecoveryReport awaiting rejit/replay timings
         # caller-supplied run metadata stamped into every checkpoint's
         # extra dict (e.g. the CLI's total-step budget, which fixes the LR
         # schedule); surfaced back on restore() as .restored_meta so the
@@ -183,12 +245,16 @@ class Engine:
 
     # ------------------------------------------------- checkpoint / resume
     def save_ckpt(self, params, opt_state, step: int) -> str:
-        from repro.checkpoint import save_checkpoint
+        from repro.checkpoint import gc_checkpoints, save_checkpoint
         extra = {"step": step}
         extra.update(self.ckpt_meta or {})
-        return save_checkpoint(self.ckpt_dir, step,
+        path = save_checkpoint(self.ckpt_dir, step,
                                {"params": params, "opt_state": opt_state},
                                extra=extra)
+        if self.ckpt_keep:
+            gc_checkpoints(self.ckpt_dir, self.ckpt_keep,
+                           protect=self._protect_steps)
+        return path
 
     def restore(self, ckpt_dir: Optional[str] = None,
                 step: Optional[int] = None) -> int:
@@ -221,6 +287,8 @@ class Engine:
         self.opt_state = arrays["opt_state"]
         self.restored_meta = dict(meta["extra"])
         self._start_step = int(meta["extra"]["step"])
+        # the live resume replays from this step: the GC must never take it
+        self._protect_steps.add(self._start_step)
         return self._start_step
 
     # ------------------------------------------------- production: jit once
@@ -356,6 +424,144 @@ class Engine:
                     "engine state was lost by a failed run; call "
                     "init(key) (or assign params/opt_state) before rerunning")
             self.init(jax.random.PRNGKey(0))
+        self._loss_acc = {}
+        if self.elastic:
+            return self._run_production_elastic(loader, steps)
+        return self._production_pass(loader, steps)
+
+    # --------------------------------------------- elastic fault detection
+    def _maybe_inject(self, step: int):
+        """Consult the fault injector for this step over the *current*
+        mesh's device ids; a non-OK verdict raises :class:`DeviceLost`.
+
+        A kill raises before the step is issued (the state is not donated
+        for that step — exactly a runtime device error surfacing at
+        dispatch).  A hang is only observable through the watchdog: the
+        simulated never-completing collective runs under
+        :func:`call_with_deadline` and the resulting timeout is classified
+        as a lost device.  Each verdict fires at most once (the fired-set),
+        so the post-recovery replay makes progress past the drill step."""
+        inj = self.device_faults
+        if inj is None:
+            return
+        for d in self.mesh.devices.flatten():
+            kind = inj.decide(step, d.id)
+            if kind is None or (step, d.id, kind) in self._fired_faults:
+                continue
+            self._fired_faults.add((step, d.id, kind))
+            t0 = time.perf_counter()
+            if kind == HANG:
+                if not self.watchdog_s or self.watchdog_s <= 0:
+                    raise RuntimeError(
+                        f"hang injected at step {step} on device {d.id} but "
+                        "no watchdog is armed (watchdog_s <= 0): the run "
+                        "would stall forever inside the collective")
+                try:
+                    call_with_deadline(
+                        simulate_hang, (self.watchdog_s,),
+                        deadline_s=self.watchdog_s,
+                        what=f"step {step} (injected hang)")
+                except WatchdogTimeout:
+                    pass                      # classified: fall through
+            err = DeviceLost(step, d.id, kind)
+            err.detect_s = time.perf_counter() - t0
+            raise err
+
+    def _run_production_elastic(self, loader, steps: int) -> EngineResult:
+        from repro.checkpoint import latest_step
+        if iter(loader) is loader:
+            raise ValueError(
+                "elastic mode needs a re-iterable loader (got a bare "
+                "iterator): recovery replays the stream from the rollback "
+                "step, which requires restarting iteration")
+        # step-0 anchor: a device lost before the first periodic checkpoint
+        # must still have a rollback point
+        if latest_step(self.ckpt_dir) is None:
+            self.save_ckpt(self.params, self.opt_state, self._start_step)
+            self._protect_steps.add(self._start_step)
+        t_wall = time.perf_counter()
+        while True:
+            try:
+                res = self._production_pass(loader, steps)
+            except DeviceLost as e:
+                self.recovery_log.append(self._recover(e))
+                continue
+            res.wall_s = time.perf_counter() - t_wall   # includes recoveries
+            res.recovery = list(self.recovery_log)
+            return res
+
+    def _recover(self, e: DeviceLost) -> RecoveryReport:
+        """One detect→reshrink→rollback→re-shard→re-jit recovery.
+
+        Bit-equality contract: everything that defines the arithmetic after
+        recovery — the checkpoint state, the reshrunk mesh's shardings, the
+        re-jitted step, the replayed batches — is exactly what a fresh run
+        launched from that checkpoint on that mesh would use, so the two are
+        indistinguishable (``tests/test_elastic.py`` asserts bit-equal)."""
+        from repro.checkpoint import latest_step, load_checkpoint
+        from repro.launch.mesh import plan_reshrink
+        t0 = time.perf_counter()
+        lost = e.device
+        if lost < 0:
+            # the watchdog classified a stall but nothing identified the
+            # chip (a real un-injected hang): drop the highest-id device —
+            # a real deployment would health-probe first, but shrinking by
+            # one guarantees forward progress either way
+            lost = max(d.id for d in self.mesh.devices.flatten())
+        # params may be donated-deleted buffers here; shapes/dtypes survive
+        # deletion, which is all the divisibility validation needs
+        template = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), self.params)
+        plan = plan_reshrink(self.mesh, [lost],
+                             global_batch=self.shape.global_batch,
+                             params=template, cfg=self.cfg)
+        t_plan = time.perf_counter()
+
+        rollback = latest_step(self.ckpt_dir)
+        if rollback is None:
+            raise RuntimeError(
+                "device lost but no valid checkpoint remains to roll back "
+                f"to under {self.ckpt_dir}") from e
+        self._protect_steps.add(rollback)
+        old_shape = tuple(int(s) for s in self.mesh.devices.shape)
+        self.mesh = plan.mesh
+        # everything derived from the old mesh is now invalid
+        self._step_fn = None
+        self._batch_shardings = None
+        self._zero_embeds = None
+        self._jit_warm = False
+
+        # restore + re-shard onto the shrunken mesh's NamedShardings
+        names = jax.tree.map(lambda p: np.zeros((), np.float32),
+                             {"params": self.params,
+                              "opt_state": self.opt_state})
+        arrays, _ = load_checkpoint(self.ckpt_dir, names, rollback)
+        with self.mesh:
+            in_sh, _ = train_shardings(
+                arrays["params"], arrays["opt_state"], self.cfg, self.mesh,
+                self.shape, with_embeds=bool(self.cfg.frontend),
+                with_perm=self.reassembly != "none")
+        self.params = jax.device_put(arrays["params"], in_sh[0])
+        self.opt_state = jax.device_put(arrays["opt_state"], in_sh[1])
+        jax.block_until_ready((self.params, self.opt_state))
+        self._start_step = int(rollback)
+        t_restore = time.perf_counter()
+
+        report = RecoveryReport(
+            step=e.step, device=e.device, cause=e.cause,
+            rollback_step=int(rollback),
+            rollback_depth=int(e.step - rollback),
+            old_mesh_shape=old_shape, new_mesh_shape=plan.new_shape,
+            detect_s=getattr(e, "detect_s", 0.0),
+            plan_s=t_plan - t0, restore_s=t_restore - t_plan,
+            extra={"degraded_axes": list(plan.degraded_axes),
+                   "n_idle": plan.n_idle, "dropped_device": int(lost)})
+        # rejit_s (first post-recovery step: recompile for the new mesh) and
+        # replay_s (loader fast-forward) are filled in by the next pass
+        self._pending_report = report
+        return report
+
+    def _production_pass(self, loader, steps: int) -> EngineResult:
         step_fn = self._build_step()
         start = self._start_step
         if start >= steps:
@@ -367,14 +573,25 @@ class Engine:
                 f"steps={steps}: nothing to run")
         self._start_step = 0
 
+        # deterministic loader replay: skip the already-consumed prefix
+        # eagerly (and time it — this is the recovery model's replay term)
+        it = iter(loader)
+        t_replay = time.perf_counter()
+        try:
+            for _ in range(start):
+                next(it)
+        except StopIteration:
+            pass
+        if self._pending_report is not None:
+            self._pending_report.replay_s = time.perf_counter() - t_replay
+
         def host_batches():
-            # steps is the *global* budget: a resumed run replays (and
-            # skips) the first `start` loader batches, then runs the rest
-            for i, hb in enumerate(loader):
+            # steps is the *global* budget: a resumed run replays (skips)
+            # the first `start` loader batches, then runs the rest
+            for i, hb in enumerate(it, start=start):
                 if i >= steps:
                     return
-                if i >= start:
-                    yield hb
+                yield hb
 
         if self.pipeline:
             batches = self._device_batches(host_batches())
@@ -383,14 +600,41 @@ class Engine:
             # a step is in flight (the consumer blocks below)
             batches = map(self._put_batch, host_batches())
 
-        losses = []                        # device scalars, one host sync
+        # device scalars keyed by global step, one host sync at the end;
+        # a replayed step simply overwrites its pre-rollback entry
+        losses = self._loss_acc
         params, opt_state = self.params, self.opt_state
         self.params = self.opt_state = None    # donated: drop stale refs
+        armed = self.device_faults is not None or self.elastic
+        deadline = self.watchdog_s if (armed and self.watchdog_s
+                                       and self.watchdog_s > 0) else None
         t0 = time.perf_counter()
+        k = start
         try:
             for k, batch in enumerate(batches, start=start):
-                params, opt_state, loss = step_fn(params, opt_state, batch)
-                losses.append(loss)
+                self._maybe_inject(k)          # raises DeviceLost on verdict
+                t_step = time.perf_counter()
+                if deadline is not None and self._jit_warm:
+                    # supervised dispatch: a hung collective surfaces as a
+                    # WatchdogTimeout instead of stalling the run forever.
+                    # The warmup step (fresh jit: unbounded compile time)
+                    # runs unsupervised so a slow compile is never
+                    # misclassified as a hang.
+                    params, opt_state, loss = call_with_deadline(
+                        step_fn, (params, opt_state, batch),
+                        deadline_s=deadline, what=f"step {k}")
+                else:
+                    params, opt_state, loss = step_fn(params, opt_state,
+                                                      batch)
+                self._jit_warm = True
+                if self._pending_report is not None:
+                    # first post-recovery step: its wall time is the re-jit
+                    # cost (recompile for the reshrunk mesh)
+                    jax.block_until_ready(loss)
+                    self._pending_report.rejit_s = (time.perf_counter()
+                                                    - t_step)
+                    self._pending_report = None
+                losses[k] = loss
                 if not self.pipeline:
                     jax.block_until_ready(loss)
                 if self.log_every and k % self.log_every == 0:
@@ -404,14 +648,24 @@ class Engine:
                     # queue keeps producing meanwhile)
                     self.save_ckpt(params, opt_state, k + 1)
             jax.block_until_ready(params)
+        except WatchdogTimeout as t:
+            # a real (un-injected) stall: classify as a lost device with no
+            # identified chip; the elastic loop (or the caller) decides what
+            # to drop.  The worker thread still holds the donated buffers,
+            # so the engine state is gone either way — exactly a real hang.
+            err = DeviceLost(k, -1, HANG)
+            err.detect_s = deadline or 0.0
+            raise err from t
         finally:
             # on failure these may point at donated (deleted) buffers — a
             # later use then raises loudly instead of silently restarting
             self.params, self.opt_state = params, opt_state
         wall = time.perf_counter() - t0
-        loss_arr = (np.asarray(jax.device_get(losses), np.float32)
-                    if losses else np.zeros((0,), np.float32))
-        return EngineResult(losses=loss_arr, steps=len(losses), wall_s=wall,
+        order = sorted(losses)
+        loss_arr = (np.asarray(jax.device_get([losses[i] for i in order]),
+                               np.float32)
+                    if order else np.zeros((0,), np.float32))
+        return EngineResult(losses=loss_arr, steps=len(order), wall_s=wall,
                             params=params, opt_state=opt_state)
 
     # ---------------------------------------------------------- sim facade

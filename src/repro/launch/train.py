@@ -20,14 +20,29 @@ in ``repro.launch.engine``; the pipelined and serial paths produce
 float32-ULP-identical parameters (``tests/test_engine.py``).
 
 Fault tolerance: ``--ckpt-every N`` writes a step-boundary checkpoint into
-``--ckpt`` every N steps, and ``--resume`` restores the latest one — the
-loader is a pure function of its seed, so the resumed run replays exactly
-the killed run's remaining batches and finishes ULP-identical to an
+``--ckpt`` every N steps (``--ckpt-keep N`` bounds the directory to the N
+newest valid steps), and ``--resume`` restores the latest one — the loader
+is a pure function of its seed, so the resumed run replays exactly the
+killed run's remaining batches and finishes ULP-identical to an
 uninterrupted run (``tests/test_faults.py``).
+
+Elastic production engine: ``--elastic`` arms the device-loss supervision
+loop (``repro.launch.elastic`` + ``Engine``): a lost chip or hung
+collective (watchdog deadline ``--watchdog-s``) triggers mesh reshrink +
+checkpoint rollback + deterministic replay instead of a crash.
+``--drill kill-device:STEP[:DEV]`` / ``hang-device:STEP[:DEV]`` injects a
+scripted fault for recovery drills; with ``--elastic`` the CLI then
+*verifies the recovery guarantee* — it re-runs fresh from the rollback
+checkpoint on the shrunken mesh and asserts the final parameters are
+bit-equal, printing ``RECOVERY_DRILL bit_equal=true`` (the CI
+``recovery-drill`` job greps exactly this).  A drill without ``--elastic``
+fails loudly with the ``DeviceLost`` diagnostic — never a silent hang.
 """
 from __future__ import annotations
 
 import argparse
+import sys
+import tempfile
 
 import jax
 import numpy as np
@@ -75,6 +90,22 @@ def main(argv=None):
                     help="resume from the latest checkpoint in --ckpt; the "
                          "run replays the loader tail and finishes "
                          "ULP-identical to an uninterrupted run")
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="retain only the N newest valid checkpoints after "
+                         "every save (0: keep everything); the step a live "
+                         "resume/rollback depends on is never collected")
+    ap.add_argument("--elastic", action="store_true",
+                    help="device-loss supervision: watchdog detection, mesh "
+                         "reshrink over the survivors, checkpoint rollback, "
+                         "deterministic replay (see repro.launch.elastic)")
+    ap.add_argument("--drill", default=None,
+                    help="scripted fault injection: kill-device:STEP[:DEV] "
+                         "or hang-device:STEP[:DEV]; with --elastic the run "
+                         "recovers and the CLI verifies bit-equality against "
+                         "a fresh run from the rollback checkpoint")
+    ap.add_argument("--watchdog-s", type=float, default=60.0,
+                    help="per-step watchdog deadline (seconds): a step that "
+                         "exceeds it is classified as a lost device")
     ap.add_argument("--halt-at", type=int, default=0,
                     help="crash drill: stop after this many global steps "
                          "without finishing the --steps budget (the LR "
@@ -86,6 +117,20 @@ def main(argv=None):
         ap.error("--resume needs --ckpt")
     if args.ckpt_every and not args.ckpt:
         ap.error("--ckpt-every needs --ckpt")
+    if args.ckpt_keep and not args.ckpt:
+        ap.error("--ckpt-keep needs --ckpt")
+    if args.elastic and not args.ckpt:
+        # recovery needs a rollback anchor; a drill run doesn't need the
+        # checkpoints to outlive the process
+        args.ckpt = tempfile.mkdtemp(prefix="tl_elastic_ckpt_")
+        print(f"--elastic without --ckpt: rollback anchors in {args.ckpt}")
+    drill = None
+    if args.drill:
+        from repro.launch.elastic import DeviceFaultSpec, parse_drill
+        try:
+            drill = DeviceFaultSpec(drills=(parse_drill(args.drill),))
+        except ValueError as e:
+            ap.error(str(e))
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
@@ -96,7 +141,9 @@ def main(argv=None):
     engine = Engine(model, cfg, opt, mesh, shape,
                     pipeline=args.pipeline, remat_mode=args.remat,
                     reassembly=args.reassembly, log_every=args.log_every,
-                    ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every)
+                    ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+                    ckpt_keep=args.ckpt_keep, elastic=args.elastic,
+                    device_faults=drill, watchdog_s=args.watchdog_s)
     # the LR schedule is a function of the run config (--steps fixes the
     # cosine horizon, --lr the peak): stamp it into every checkpoint so a
     # resume under a *different* config fails loudly instead of silently
@@ -132,7 +179,19 @@ def main(argv=None):
     loader = VirtualBatchLoader(shards, args.batch, seed=0)
 
     budget = min(args.halt_at, args.steps) if args.halt_at else args.steps
-    result = engine.run(loader, steps=budget)
+    try:
+        result = engine.run(loader, steps=budget)
+    except Exception as e:
+        from repro.launch.elastic import DeviceLost
+        if isinstance(e, DeviceLost):
+            # un-recovered device loss (no --elastic): fail loudly with the
+            # diagnostic instead of a hang or a bare traceback
+            print(f"FATAL: {e}\n       rerun with --elastic to recover "
+                  "(reshrink + rollback + replay)", file=sys.stderr)
+            raise SystemExit(2)
+        raise
+    for rec in result.recovery or ():
+        print("recovery:", rec.as_dict())
     losses = result.losses.tolist()
     print(f"final loss {np.mean(losses[-5:]):.4f} "
           f"(start {np.mean(losses[:5]):.4f}) "
@@ -145,6 +204,30 @@ def main(argv=None):
         path = engine.save_ckpt(result.params, result.opt_state,
                                 at + result.steps)
         print("checkpoint:", path)
+
+    if args.elastic and args.drill and result.recovery:
+        # verify the recovery guarantee end-to-end: a *fresh* engine on the
+        # final (shrunken) mesh, restored from the rollback checkpoint and
+        # run over the same loader, must produce bit-equal parameters —
+        # post-recovery training is indistinguishable from a clean launch
+        rollback = result.recovery[-1].rollback_step
+        oracle = Engine(model, cfg, opt, engine.mesh, shape,
+                        pipeline=args.pipeline, remat_mode=args.remat,
+                        reassembly=args.reassembly, ckpt_dir=args.ckpt)
+        oracle.restore(step=rollback)
+        fresh = oracle.run(loader, steps=budget)
+        bit_equal = all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree.leaves(result.params),
+                            jax.tree.leaves(fresh.params)))
+        print(f"RECOVERY_DRILL bit_equal={str(bit_equal).lower()} "
+              f"rollback_step={rollback} "
+              f"mesh={tuple(int(s) for s in engine.mesh.devices.shape)}")
+        if not bit_equal:
+            print("FATAL: post-recovery parameters diverge from a fresh run "
+                  "off the rollback checkpoint — the recovery guarantee is "
+                  "broken", file=sys.stderr)
+            raise SystemExit(3)
     return losses
 
 

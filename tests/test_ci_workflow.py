@@ -49,7 +49,8 @@ def test_workflow_parses_with_all_triggers(wf):
                          "schedule"}
     assert trig["schedule"], "nightly leg needs a cron schedule"
     assert set(wf["jobs"]) >= {"tests", "bench-smoke", "lint",
-                               "nightly-slow"}
+                               "nightly-slow", "recovery-drill",
+                               "recovery-drill-tpu"}
 
 
 def test_fast_tier_runs_tier1_command_verbatim(wf):
@@ -99,6 +100,30 @@ def test_bench_smoke_job_gates_schema_and_uploads_artifact(wf):
     uploads = [s for s in _steps(job)
                if "upload-artifact" in s.get("uses", "")]
     assert uploads and uploads[0]["with"]["path"] == "BENCH_tl_step_smoke.json"
+
+
+def test_recovery_drill_job_verifies_the_elastic_guarantee(wf):
+    """The recovery-drill job must (a) run the elastic drill on the
+    forced-8 host mesh and pin the bit-equal verdict, and (b) prove the
+    non-elastic flavor fails *loudly* — a specific exit code, so a
+    timeout-killed silent hang can never pass."""
+    job = wf["jobs"]["recovery-drill"]
+    assert job["env"]["JAX_PLATFORMS"] == "cpu"
+    assert "--xla_force_host_platform_device_count=8" in job["env"]["XLA_FLAGS"]
+    runs = " ".join(_run_lines(job))
+    assert "--mesh host --elastic" in runs
+    assert "--drill kill-device:2" in runs
+    assert "RECOVERY_DRILL bit_equal=true" in runs
+    # the loud-failure leg: watchdog-classified hang, pinned exit code
+    assert "hang-device:1" in runs and "--elastic" not in runs.split(
+        "hang-device:1")[1]
+    assert 'test "$code" -eq 2' in runs
+
+
+def test_recovery_drill_tpu_stub_is_dispatch_only(wf):
+    job = wf["jobs"]["recovery-drill-tpu"]
+    assert job["if"] == "github.event_name == 'workflow_dispatch'"
+    assert any("repro.launch.train" in r for r in _run_lines(job))
 
 
 def test_lint_job_runs_ruff_with_committed_config(wf):

@@ -1,0 +1,347 @@
+"""Elastic production engine: detection, reshrink, rollback recovery.
+
+Covers the full device-loss path of ``repro.launch.elastic`` +
+``repro.launch.mesh.plan_reshrink`` + the engine's recovery orchestration:
+
+* seeded fault verdicts are pure functions of ``(seed, step, device)`` —
+  order-independent and replay-stable (the invariant that makes a
+  deterministic drill meaningful);
+* the watchdog classifies a hung collective within its deadline;
+* the reshrink planner degrades data first, honors batch divisibility,
+  keeps determinism, and raises on exhaustion;
+* checkpoint integrity (per-array SHA-256) and durability: a truncated or
+  bit-flipped step dir is skipped with a warning and the restore falls
+  back to the newest valid step; GC never collects the rollback anchor;
+* end-to-end recovery drills through the real CLI: with ``--elastic`` a
+  scripted kill recovers and the final parameters are **bit-equal** to a
+  fresh run launched from the rollback checkpoint on the shrunken mesh;
+  without ``--elastic`` the same drill fails loudly (the watchdog fires
+  within its deadline — never a silent hang).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.runtime_model import expected_recovery_overhead, recovery_cost
+from repro.launch.elastic import (HANG, KILL, DeviceFaultInjector,
+                                  DeviceFaultSpec, DeviceLost, Drill,
+                                  RecoveryReport, WatchdogTimeout,
+                                  call_with_deadline, parse_drill)
+
+_ENV_BASE = dict(os.environ, PYTHONPATH=os.path.abspath("src"),
+                 XLA_FLAGS="--xla_force_host_platform_device_count=8")
+
+
+# ------------------------------------------------------------- drill parsing
+
+def test_parse_drill():
+    assert parse_drill("kill-device:3") == Drill(KILL, 3, 0)
+    assert parse_drill("kill-device:3:5") == Drill(KILL, 3, 5)
+    assert parse_drill("hang-device:0:2") == Drill(HANG, 0, 2)
+
+
+@pytest.mark.parametrize("bad", ["kill-device", "kill-device:x",
+                                 "explode-device:3", "kill-device:1:2:3",
+                                 "hang-device:-1"])
+def test_parse_drill_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_drill(bad)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        DeviceFaultSpec(kill_prob=1.0)
+    with pytest.raises(ValueError):
+        DeviceFaultSpec(kill_prob=0.6, hang_prob=0.5)
+    with pytest.raises(ValueError):
+        Drill("explode", 1)
+
+
+# -------------------------------------------------- injector (verdict purity)
+
+def test_injector_verdicts_are_order_independent():
+    """decide(step, device) is a pure function of (seed, step, device): the
+    verdict never depends on how many other pairs were consulted first, so
+    a rolled-back replay re-draws identical faults."""
+    spec = DeviceFaultSpec(kill_prob=0.2, hang_prob=0.2, seed=7)
+    keys = [(s, d) for s in range(20) for d in range(8)]
+    inj = DeviceFaultInjector(spec)
+    serial = [inj.decide(*k) for k in keys]
+    # reversed consultation order, fresh injector: same verdicts
+    reversed_ = [DeviceFaultInjector(spec).decide(*k)
+                 for k in reversed(keys)][::-1]
+    assert serial == reversed_
+    # re-issued after an "eviction" (subset re-consulted mid-stream)
+    replay = [inj.decide(*k) for k in keys[40:]]
+    assert replay == serial[40:]
+    # seeded: a different seed gives a different fault pattern
+    other = [DeviceFaultInjector(
+        DeviceFaultSpec(kill_prob=0.2, hang_prob=0.2, seed=8)).decide(*k)
+        for k in keys]
+    assert other != serial
+    kinds = set(serial)
+    assert KILL in kinds and HANG in kinds and None in kinds
+
+
+def test_injector_drills_win_and_first_fault_scans_in_order():
+    spec = DeviceFaultSpec(drills=(Drill(KILL, 3, 1), Drill(HANG, 3, 0)))
+    inj = DeviceFaultInjector(spec)
+    assert inj.decide(3, 1) == KILL
+    assert inj.decide(3, 0) == HANG
+    assert inj.decide(2, 1) is None
+    # device index order is canonical: device 0's hang wins the scan
+    assert inj.first_fault(3, 8) == (0, HANG)
+    assert inj.first_fault(4, 8) is None
+
+
+# ------------------------------------------------------------------ watchdog
+
+def test_call_with_deadline_passes_value_and_errors():
+    assert call_with_deadline(lambda a, b: a + b, (2, 3),
+                              deadline_s=5.0) == 5
+
+    def boom():
+        raise KeyError("inner")
+    with pytest.raises(KeyError):
+        call_with_deadline(boom, deadline_s=5.0)
+
+
+def test_watchdog_fires_within_deadline():
+    """A hung call is classified within ~the deadline, not 'eventually'."""
+    t0 = time.perf_counter()
+    with pytest.raises(WatchdogTimeout):
+        call_with_deadline(time.sleep, (30.0,), deadline_s=0.3,
+                           what="hung collective")
+    took = time.perf_counter() - t0
+    assert 0.25 <= took < 3.0      # fired at ~deadline, far before the sleep
+
+
+def test_device_lost_carries_the_diagnosis():
+    e = DeviceLost(7, 3, HANG)
+    assert (e.step, e.device, e.cause) == (7, 3, HANG)
+    assert "device 3 lost at step 7" in str(e)
+
+
+# ------------------------------------------------- recovery cost accounting
+
+def test_recovery_report_total_and_dict():
+    r = RecoveryReport(step=9, device=2, cause=KILL, rollback_step=8,
+                       rollback_depth=1, detect_s=0.1, plan_s=0.2,
+                       restore_s=0.3, rejit_s=0.4, replay_s=0.5)
+    assert r.total_s == pytest.approx(1.5)
+    d = r.as_dict()
+    assert d["total_s"] == pytest.approx(1.5)
+    assert d["rollback_depth"] == 1
+
+
+def test_recovery_cost_terms():
+    # rollback depth x step clock + re-jit + the measured small terms
+    assert recovery_cost(2.0, 3, 10.0) == pytest.approx(16.0)
+    assert recovery_cost(2.0, 0, 10.0, restore_s=1.0,
+                         detect_s=0.5, replay_s=0.5) == pytest.approx(12.0)
+    with pytest.raises(ValueError):
+        recovery_cost(1.0, -1, 0.0)
+
+
+def test_expected_recovery_overhead_scales_with_ckpt_cadence():
+    # deeper cadence -> deeper expected rollback -> more overhead per step
+    lo = expected_recovery_overhead(1.0, loss_prob=1e-3, ckpt_every=1,
+                                    rejit_s=30.0)
+    hi = expected_recovery_overhead(1.0, loss_prob=1e-3, ckpt_every=101,
+                                    rejit_s=30.0)
+    assert lo == pytest.approx(1e-3 * 30.0)
+    assert hi == pytest.approx(1e-3 * (30.0 + 50.0))
+    assert expected_recovery_overhead(1.0, loss_prob=0.0, ckpt_every=10,
+                                      rejit_s=30.0) == 0.0
+    with pytest.raises(ValueError):
+        expected_recovery_overhead(1.0, loss_prob=1.0, ckpt_every=10,
+                                   rejit_s=0.0)
+
+
+# ------------------------------------------- checkpoint integrity/durability
+
+def _tree(seed):
+    r = np.random.default_rng(seed)
+    return {"params": {"w": r.normal(size=(4, 4)).astype(np.float32),
+                       "b": r.normal(size=(4,)).astype(np.float32)},
+            "opt_state": {"m": r.normal(size=(4, 4)).astype(np.float32)}}
+
+
+def test_checkpoint_truncation_falls_back_to_newest_valid(tmp_path):
+    """Regression: a deliberately truncated npz is skipped with a warning
+    and latest_step/restore fall back to the newest valid step; naming the
+    corrupt step explicitly raises instead of silently substituting."""
+    from repro.checkpoint import latest_step, load_checkpoint
+    from repro.checkpoint.ckpt import save_checkpoint
+    d = str(tmp_path)
+    save_checkpoint(d, 2, _tree(0))
+    save_checkpoint(d, 4, _tree(1))
+    assert latest_step(d) == 4
+    npz = os.path.join(d, "step_00000004", "arrays.npz")
+    with open(npz, "r+b") as f:                  # truncate mid-payload
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.warns(UserWarning, match="corrupt/truncated"):
+        assert latest_step(d) == 2
+    with pytest.warns(UserWarning):
+        got, meta = load_checkpoint(d, _tree(9), None)
+    assert meta["step"] == 2
+    np.testing.assert_array_equal(got["params"]["w"], _tree(0)["params"]["w"])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        load_checkpoint(d, _tree(9), 4)
+
+
+def test_checkpoint_checksum_detects_silent_payload_swap(tmp_path):
+    """A payload whose bytes changed under an intact meta (the bit-flip
+    model) fails SHA-256 verification."""
+    from repro.checkpoint import verify_checkpoint
+    from repro.checkpoint.ckpt import save_checkpoint
+    d = str(tmp_path)
+    path = save_checkpoint(d, 1, _tree(0))
+    assert verify_checkpoint(path)
+    t = _tree(0)
+    flipped = [np.asarray(x) for x in
+               [t["params"]["b"], t["params"]["w"] + 1, t["opt_state"]["m"]]]
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{f"a{i}": a for i, a in enumerate(flipped)})
+    assert not verify_checkpoint(path)
+
+
+def test_gc_keeps_newest_valid_and_protected(tmp_path):
+    from repro.checkpoint import gc_checkpoints, latest_step
+    from repro.checkpoint.ckpt import save_checkpoint
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, s, _tree(s))
+    npz = os.path.join(d, "step_00000004", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(10)                           # newest step is corrupt
+    # keep=2 retains the 2 newest *valid* (2, 3); the corrupt 4 is
+    # collected, never counted against retention; protected 1 survives
+    deleted = gc_checkpoints(d, 2, protect=[1])
+    assert deleted == [4]
+    deleted = gc_checkpoints(d, 1, protect=[1])
+    assert deleted == [2]
+    assert latest_step(d) == 3
+    with pytest.raises(ValueError):
+        gc_checkpoints(d, 0)
+
+
+# --------------------------------------------------- reshrink planner (8dev)
+
+RESHRINK_SCRIPT = textwrap.dedent("""
+    import json, os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.launch.mesh import (ReshrinkError, make_host_mesh,
+                                   make_multipod_debug_mesh, plan_reshrink)
+
+    out = {}
+    mesh = make_host_mesh()                      # (4, 2) = (data, model)
+    plan = plan_reshrink(mesh, [0], global_batch=8)
+    out["host_shape"] = list(plan.new_shape)     # data degrades, model kept
+    out["host_degraded"] = list(plan.degraded_axes)
+    out["host_idle"] = plan.n_idle
+    out["lost_absent"] = all(d.id != 0 for d in plan.mesh.devices.flatten())
+
+    # batch divisibility constrains the surviving data width: batch=6 over
+    # 6 survivors -> (3, 2); prime batch=7 -> data collapses to 1
+    out["b6_shape"] = list(plan_reshrink(mesh, [0, 7],
+                                         global_batch=6).new_shape)
+    out["b7_shape"] = list(plan_reshrink(mesh, [0],
+                                         global_batch=7).new_shape)
+
+    mp = make_multipod_debug_mesh()              # (2, 2, 2) pod/data/model
+    mplan = plan_reshrink(mp, [3], global_batch=8)
+    out["mp_shape"] = list(mplan.new_shape)
+    out["mp_axes"] = list(mplan.axis_names)
+
+    again = plan_reshrink(mesh, [0], global_batch=8)
+    out["deterministic"] = (
+        [d.id for d in plan.mesh.devices.flatten()]
+        == [d.id for d in again.mesh.devices.flatten()])
+
+    try:
+        plan_reshrink(mesh, [d.id for d in mesh.devices.flatten()],
+                      global_batch=8)
+        out["exhaustion_raises"] = False
+    except ReshrinkError:
+        out["exhaustion_raises"] = True
+    print("RESULT", json.dumps(out))
+""")
+
+
+def test_plan_reshrink_degrades_data_first():
+    proc = subprocess.run([sys.executable, "-c", RESHRINK_SCRIPT],
+                          env=_ENV_BASE, capture_output=True, text=True,
+                          timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    out = json.loads(line.split("RESULT ")[1])
+    assert out["host_shape"] == [2, 2]          # (4,2) - 1 dev -> (2,2)
+    assert out["host_degraded"] == ["data"]     # model axis untouched
+    assert out["host_idle"] == 3
+    assert out["lost_absent"]
+    assert out["b6_shape"] == [3, 2]
+    assert out["b7_shape"] == [1, 2]            # prime batch: data -> 1
+    assert out["mp_shape"] == [2, 1, 2]         # data before pod/model
+    assert out["mp_axes"] == ["pod", "data", "model"]
+    assert out["deterministic"]
+    assert out["exhaustion_raises"]
+
+
+# ------------------------------------------------- recovery drills (the CLI)
+
+def test_recovery_drill_elastic_is_bit_equal(tmp_path):
+    """Acceptance drill: seeded kill at step 3 with --ckpt-every 2 rolls
+    back to step 2 and the elastic run's final params are bit-equal to a
+    fresh run launched from that checkpoint on the shrunken mesh (the CLI
+    verifies and prints the verdict)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--steps", "4",
+         "--mesh", "debug", "--nodes", "2", "--batch", "4", "--seq", "32",
+         "--elastic", "--drill", "kill-device:3",
+         "--ckpt", str(tmp_path), "--ckpt-every", "2", "--ckpt-keep", "2"],
+        env=_ENV_BASE, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    drill = [l for l in proc.stdout.splitlines()
+             if l.startswith("RECOVERY_DRILL")][0]
+    assert "bit_equal=true" in drill
+    assert "rollback_step=2" in drill           # floor(3/2)*2
+    rec = [l for l in proc.stdout.splitlines() if l.startswith("recovery:")]
+    assert len(rec) == 1 and "'rollback_depth': 1" in rec[0]
+
+
+def test_drill_without_elastic_fails_loudly_via_watchdog(tmp_path):
+    """Without --elastic a hung collective must not hang the run: the
+    watchdog classifies it within the deadline and the CLI exits loudly
+    with the DeviceLost diagnostic."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--steps", "3",
+         "--mesh", "debug", "--nodes", "2", "--batch", "4", "--seq", "32",
+         "--drill", "hang-device:1", "--watchdog-s", "3"],
+        env=_ENV_BASE, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 2
+    assert "FATAL" in proc.stderr
+    assert "lost at step 1 (hang)" in proc.stderr
+    assert "--elastic" in proc.stderr           # points at the recovery path
+
+
+@pytest.mark.slow
+def test_recovery_drill_hang_elastic(tmp_path):
+    """Nightly: the hang flavor end-to-end — watchdog detection feeding the
+    same reshrink/rollback path, bit-equal verdict included."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--steps", "4",
+         "--mesh", "host", "--nodes", "2", "--batch", "4", "--seq", "32",
+         "--elastic", "--drill", "hang-device:2", "--watchdog-s", "5",
+         "--ckpt", str(tmp_path), "--ckpt-every", "2"],
+        env=_ENV_BASE, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    drill = [l for l in proc.stdout.splitlines()
+             if l.startswith("RECOVERY_DRILL")][0]
+    assert "bit_equal=true" in drill

@@ -17,6 +17,8 @@ is re-verified after re-planning.
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.configs.paper_models import DATRET
 from repro.core.faults import (FaultInjector, FaultSpec, RecoveryPolicy,
@@ -284,6 +286,39 @@ def test_fault_decisions_are_order_independent():
     again = FaultInjector(FaultSpec(drop_prob=0.5, straggle_prob=0.3,
                                     straggle_factor=2.0, seed=42))
     assert fwd == [again.decide(k).kind for k in keys]
+
+
+_KEY = st.tuples(st.integers(0, 5), st.integers(0, 63),
+                 st.integers(0, 7), st.integers(0, 3))
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       drop=st.floats(0.0, 0.6), straggle=st.floats(0.0, 0.6),
+       keys=st.lists(_KEY, min_size=1, max_size=48),
+       split=st.integers(0, 47))
+@settings(max_examples=30, deadline=None)
+def test_fault_verdicts_order_independent_property(seed, drop, straggle,
+                                                   keys, split):
+    """Property: for any spec and any (epoch, batch, node, attempt) key
+    stream, the verdicts are identical whether the stream is consulted
+    serially, in pipelined (reversed/interleaved) order, or re-issued from
+    an arbitrary split point after a mid-epoch eviction re-plan — the
+    verdict is a pure function of (seed, key), never of consultation
+    history.  (Runs under the real hypothesis when installed, else the
+    seeded shim in conftest.)"""
+    spec = FaultSpec(drop_prob=drop, straggle_prob=straggle, seed=seed)
+    inj = FaultInjector(spec)
+    serial = [(inj.decide(k).kind, inj.decide(k).factor) for k in keys]
+    # pipelined: a fresh injector consulted in reversed order
+    pipelined = [(o.kind, o.factor)
+                 for o in (FaultInjector(spec).decide(k)
+                           for k in reversed(keys))]
+    assert serial == list(reversed(pipelined))
+    # re-issued after eviction: replay an arbitrary suffix mid-stream
+    cut = split % len(keys)
+    replant = [(inj.decide(k).kind, inj.decide(k).factor)
+               for k in keys[cut:]]
+    assert replant == serial[cut:]
 
 
 def test_exactly_once_assertion_catches_corruption():
