@@ -1,0 +1,159 @@
+"""Open-loop Poisson-arrival serving benchmark (``BENCH_serve.json``).
+
+Drives the continuous-batching engine (``repro.serve.ServeEngine``) with an
+**open-loop** arrival process: request arrival times are drawn from a
+Poisson process at a fixed offered load (req/s) *before* serving starts, so
+a slow server cannot throttle its own arrivals — queueing delay shows up in
+the latency percentiles instead of disappearing, which is the honest way to
+measure a serving system.
+
+Per offered-load point it records throughput (generated tokens / makespan),
+p50/p99 **per-token latency** (inter-token gaps within each request), and
+p50 TTFT (admission → first token), for one dense-attention arch
+(deepseek-7b) and one MLA+MoE arch (deepseek-v2-236b), both reduced.
+
+Numbers on this container are CPU (Pallas kernels in interpret mode) — the
+load points are chosen to show the under-load → saturation transition, not
+absolute TPU throughput.  Smoke mode (CI: ``benchmarks/run.py --only
+serve_smoke``) runs the same grid smaller; the artifact schema is identical
+(load keys are numeric and wildcarded by ``check_artifact_schema.py``).
+"""
+from __future__ import annotations
+
+import subprocess
+import time
+
+import numpy as np
+
+ARCHS = ["deepseek-7b", "deepseek-v2-236b"]
+PROMPT_LENS = [8, 16]          # small fixed set bounds prefill compilations
+PAGE_SIZE = 8
+NUM_PAGES = 128
+MAX_SLOTS = 8
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def _build(arch):
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _make_requests(cfg, n, gen_len, rate, seed):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    reqs = []
+    for i in range(n):
+        P = int(rng.choice(PROMPT_LENS))
+        prompt = rng.integers(0, cfg.vocab_size, size=(P,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gen_len,
+                            temperature=0.0, seed=i))
+    return arrivals, reqs
+
+
+def _run_load(model, cfg, params, *, rate, n_requests, gen_len, seed):
+    """One offered-load point: open-loop wall-clock drive."""
+    from repro.serve import ServeEngine
+    eng = ServeEngine(model, cfg, params, num_pages=NUM_PAGES,
+                      page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+                      max_len=max(PROMPT_LENS) + gen_len, attention="paged",
+                      decode_priority=1, seed=0)
+    arrivals, reqs = _make_requests(cfg, n_requests, gen_len, rate, seed)
+
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or not eng.idle:
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            reqs[i].arrival = t0 + arrivals[i]
+            eng.submit(reqs[i])
+            i += 1
+        if eng.idle:                      # wait for the next open-loop arrival
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.025))
+            continue
+        eng.step()
+    makespan = time.perf_counter() - t0
+
+    gaps, ttfts, n_tokens = [], [], 0
+    for r in eng.results.values():
+        ts = r.token_times
+        n_tokens += len(r.tokens)
+        ttfts.append(ts[0] - r.admitted)
+        gaps.extend(float(b - a) for a, b in zip(ts, ts[1:]))
+    gaps = gaps or [0.0]
+    return {
+        "offered_load_rps": float(rate),
+        "n_requests": n_requests,
+        "tokens": n_tokens,
+        "makespan_s": round(makespan, 4),
+        "tokens_per_s": round(n_tokens / makespan, 2),
+        "p50_token_latency_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
+        "p99_token_latency_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
+        "ttft_p50_ms": round(float(np.percentile(ttfts, 50)) * 1e3, 3),
+    }
+
+
+def bench_arch(arch, *, loads, n_requests, gen_len):
+    cfg, model, params = _build(arch)
+    # warm the jit caches (prefill per prompt length, every power-of-two
+    # decode bucket, sampler) so load point 1 doesn't pay compile time as
+    # fake queueing delay — MAX_SLOTS simultaneous requests sweep the active
+    # count through 1..MAX_SLOTS as admissions trickle in
+    from repro.serve import Request, ServeEngine
+    warm = ServeEngine(model, cfg, params, num_pages=NUM_PAGES,
+                       page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+                       max_len=max(PROMPT_LENS) + gen_len)
+    warm.serve([Request(rid=i, prompt=np.full((PROMPT_LENS[i % 2],), 1,
+                                              np.int32),
+                        max_new_tokens=MAX_SLOTS)
+                for i in range(MAX_SLOTS)])
+    out = {"attention": "paged", "gen_len": gen_len, "loads": {}}
+    for li, rate in enumerate(loads):
+        point = _run_load(model, cfg, params, rate=rate,
+                          n_requests=n_requests, gen_len=gen_len,
+                          seed=1000 + li)
+        out["loads"][str(rate)] = point
+        print(f"bench_serve/{arch}@{rate}rps,"
+              f"{point['p50_token_latency_ms'] * 1e3:.0f},"
+              f"{point['tokens_per_s']}tok/s")
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    import jax
+    loads = [4.0, 16.0] if smoke else [2.0, 8.0, 32.0]
+    n_requests = 5 if smoke else 16
+    gen_len = 8 if smoke else 24
+    result = {
+        "benchmark": "serve_smoke" if smoke else "serve",
+        "git_rev": _git_rev(),
+        "backend": jax.default_backend(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "page_size": PAGE_SIZE,
+        "num_pages": NUM_PAGES,
+        "max_slots": MAX_SLOTS,
+        "archs": {arch: bench_arch(arch, loads=loads, n_requests=n_requests,
+                                   gen_len=gen_len)
+                  for arch in ARCHS},
+    }
+    return result
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+    art = main(smoke="--smoke" in sys.argv)
+    print(json.dumps(art, indent=1))

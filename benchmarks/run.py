@@ -12,6 +12,9 @@
                     full sweep is ``python benchmarks/bench_tl_step.py``
   table1_quality  — paper Table 1: quality of CL/TL/FL/SL/SL+/SFL across
                     four dataset families
+  serve           — open-loop Poisson serving benchmark: continuous batching
+                    + paged KV cache, tokens/s and p50/p99 per-token latency
+                    vs offered load (``serve_smoke`` is the CI grid)
 
 ``--only name[,name...]`` runs a subset (CI's smoke-benchmark step runs
 ``--only tl_step_smoke`` and schema-gates the artifact it emits).
@@ -39,8 +42,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     t0 = time.time()
-    from benchmarks import (bench_tl_step, fig3_scaling, roofline_report,
-                            table1_quality, table2_runtime)
+    from benchmarks import (bench_serve, bench_tl_step, fig3_scaling,
+                            roofline_report, table1_quality, table2_runtime)
     failures = []
     entries = [
         ("table2_runtime", table2_runtime.main),
@@ -51,6 +54,8 @@ def main(argv=None) -> None:
         # full sweep appends to the BENCH_tl_step.json trajectory
         ("tl_step_smoke", lambda: bench_tl_step.main(smoke=True)),
         ("table1_quality", table1_quality.main),
+        ("serve", bench_serve.main),
+        ("serve_smoke", lambda: bench_serve.main(smoke=True)),
     ]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",")}

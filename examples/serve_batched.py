@@ -1,67 +1,83 @@
-"""Batched serving example: a request queue with mixed prompt lengths served
-through prefill + batched decode (the serve_step the decode dry-runs lower).
+"""Continuous-batching demo: N ragged prompts arrive staggered over time and
+flow through the serving engine (``repro.serve.ServeEngine``) — admission
+queue, paged KV cache, batched decode, eviction on length/EOS — with
+per-request latency printed at the end.
 
-    PYTHONPATH=src python examples/serve_batched.py [--arch starcoder2-3b]
+Unlike a static batch, nothing waits for stragglers: request 3 can be
+admitted while requests 0-2 are mid-decode, and a finished request frees its
+pages immediately for the next arrival.  Every emitted stream is
+token-identical to decoding that prompt alone (``tests/test_serve.py``).
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch deepseek-7b]
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.tl_step import make_serve_step
 from repro.models import build_model
+from repro.serve import Request, ServeEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--arch", default="deepseek-7b",
+                    help="servable arch (decoder-only, full/mla attention)")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-prompt", type=int, default=24)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--attention", choices=["paged", "dense"],
+                    default="paged")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="offered load, requests/s (Poisson arrivals)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    params = model.init(jax.random.PRNGKey(0))
 
-    # a queue of requests with different prompt lengths
     rng = np.random.default_rng(0)
     lengths = rng.integers(8, args.max_prompt + 1, args.requests)
-    prompts = [rng.integers(0, cfg.vocab_size, l) for l in lengths]
-    print(f"serving {args.requests} requests, prompt lens {lengths.tolist()}")
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, l)
+                    .astype(np.int32),
+                    max_new_tokens=args.gen)
+            for i, l in enumerate(lengths)]
+    print(f"serving {args.requests} requests, prompt lens {lengths.tolist()},"
+          f" arrivals {[round(a, 2) for a in arrivals.tolist()]} s")
 
-    # left-pad into one batch (padding attends nothing thanks to causal mask
-    # + position offsets: we right-align prompts so decode starts together)
-    P = max(lengths)
-    B = len(prompts)
-    batch_tokens = np.zeros((B, P), np.int32)
-    for i, p in enumerate(prompts):
-        batch_tokens[i, P - len(p):] = p
+    # one clock everywhere: request arrivals and the engine's token
+    # timestamps must share an epoch for the latency math below
+    eng = ServeEngine(model, cfg, params, num_pages=128, page_size=8,
+                      max_slots=8, max_len=args.max_prompt + args.gen,
+                      attention=args.attention, clock=time.perf_counter)
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or not eng.idle:
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            reqs[i].arrival = t0 + arrivals[i]
+            eng.submit(reqs[i])
+            i += 1
+        if eng.idle:                     # nothing active: wait for an arrival
+            time.sleep(min(max(arrivals[i] - now, 0.0), 0.025))
+            continue
+        eng.step()
+    makespan = time.perf_counter() - t0
 
-    cache = model.init_cache(B, max_len=P + args.gen)
-    t0 = time.time()
-    logits, cache = model.prefill(params, cache, jnp.asarray(batch_tokens))
-    t_prefill = time.time() - t0
-
-    step_fn = jax.jit(make_serve_step(model, cfg))
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for t in range(args.gen - 1):
-        logits, cache = step_fn(params, cache, tok,
-                                jnp.asarray(P + t, jnp.int32))
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
-    t_decode = time.time() - t0
-    gen = np.asarray(jnp.stack(out, 1))
-    for i in range(B):
-        print(f"req {i} (len {lengths[i]:2d}): {gen[i].tolist()}")
-    print(f"prefill {t_prefill*1e3:.0f} ms, decode "
-          f"{B*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s")
+    n_tok = 0
+    for r in sorted(eng.results.values(), key=lambda r: r.rid):
+        n_tok += len(r.tokens)
+        ttft = (r.token_times[0] - r.arrival) * 1e3
+        total = (r.token_times[-1] - r.arrival) * 1e3
+        print(f"req {r.rid} (len {r.prompt_len:2d}) [{r.finish_reason}] "
+              f"ttft {ttft:6.1f} ms, total {total:7.1f} ms: "
+              f"{r.tokens[:6]}{'...' if len(r.tokens) > 6 else ''}")
+    print(f"{n_tok} tokens in {makespan:.2f} s "
+          f"({n_tok / makespan:.1f} tok/s, attention={args.attention})")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,11 @@ Packages:
                     (custom_vjp; backward is the inverse gather), replacing
                     XLA's generic scatter lowering on the fused-step and
                     production-reassembly hot paths
+  paged_attention — paged-KV decode attention for the serving engine: block
+                    tables + lengths ride the same scalar-prefetch routing
+                    as vb_scatter so K/V BlockSpecs DMA pages straight from
+                    the shared pool; online-softmax over pages (flash-style)
+                    with an MLA fused-pool mode (V = latent prefix of K)
 
 Interpret mode is resolved process-wide by :func:`resolve_interpret`: the
 ``REPRO_PALLAS_INTERPRET`` env var (``1``/``0``) overrides, else kernels

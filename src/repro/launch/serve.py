@@ -1,7 +1,12 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Serving CLI: static-batch oracle + the continuous-batching engine.
 
+Static (the oracle the engine is tested against):
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \
         --reduced --batch 4 --prompt-len 32 --gen 16
+
+Continuous batching over the paged KV cache (``repro.serve``):
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
+        --reduced --engine continuous --attention paged --requests 8 --gen 16
 """
 from __future__ import annotations
 
@@ -16,10 +21,29 @@ from repro.configs import get_config
 from repro.core.tl_step import make_serve_step
 from repro.models import build_model
 
+# one compiled serve step per config — generate() must never re-jit per call
+_STEP_CACHE: dict = {}
+
+
+def _serve_step_fn(model, cfg):
+    fn = _STEP_CACHE.get(cfg.name)
+    if fn is None:
+        fn = jax.jit(make_serve_step(model, cfg))
+        _STEP_CACHE[cfg.name] = fn
+    return fn
+
 
 def generate(model, cfg, params, prompts, gen_len: int, *, temperature=0.0,
-             key=None):
-    """prompts: (B, P) int32.  Greedy (or sampled) continuation."""
+             key=None, seeds=None):
+    """prompts: (B, P) int32.  Greedy (or sampled) continuation, (B, gen_len).
+
+    Sampling uses per-row RNG streams from ``repro.serve.sampling`` — row b
+    draws from ``fold_in(fold_in(key, seeds[b]), step)`` — so a request's
+    stream depends only on (key, seed, step), exactly matching the
+    continuous engine's streams.  ``key=None`` defaults to ``PRNGKey(0)``;
+    ``seeds`` defaults to ``arange(B)``.
+    """
+    from repro.serve.sampling import request_key, sample_tokens
     B, P = prompts.shape
     max_len = P + gen_len
     cache = model.init_cache(B, max_len)
@@ -28,18 +52,26 @@ def generate(model, cfg, params, prompts, gen_len: int, *, temperature=0.0,
         logits, cache = model.prefill(params, cache, prompts, frames)
     else:
         logits, cache = model.prefill(params, cache, prompts)
-    step_fn = jax.jit(make_serve_step(model, cfg))
+    step_fn = _serve_step_fn(model, cfg)
+
+    if temperature > 0:
+        base = jax.random.PRNGKey(0) if key is None else key
+        seeds = jnp.arange(B) if seeds is None else jnp.asarray(seeds)
+        keys = jax.vmap(lambda s: request_key(base, s))(seeds)
+    else:
+        keys = jnp.zeros((B, 2), jnp.uint32)
+    temps = jnp.full((B,), temperature, jnp.float32)
+
     out = []
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok = sample_tokens(logits, keys, jnp.zeros((B,), jnp.int32), temps)
     for t in range(gen_len):
         out.append(tok)
+        if t == gen_len - 1:
+            break
         logits, cache = step_fn(params, cache, tok,
                                 jnp.asarray(P + t, jnp.int32))
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        tok = sample_tokens(logits, keys, jnp.full((B,), t + 1, jnp.int32),
+                            temps)
     return jnp.stack(out, axis=1)
 
 
@@ -47,24 +79,59 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["static", "continuous"],
+                    default="static")
+    ap.add_argument("--attention", choices=["paged", "dense"],
+                    default="paged", help="continuous-engine decode path")
+    ap.add_argument("--batch", "--requests", dest="batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=128)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--decode-priority", type=int, default=1)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
+
+    if args.engine == "static":
+        t0 = time.time()
+        tokens = generate(model, cfg, params, prompts, args.gen,
+                          temperature=args.temperature, key=key)
+        dt = time.time() - t0
+        print(f"generated {tokens.shape} in {dt:.2f}s "
+              f"({args.batch*args.gen/dt:.1f} tok/s)")
+        print(np.asarray(tokens[:2]))
+        return tokens
+
+    from repro.serve import Request, ServeEngine
+    eng = ServeEngine(model, cfg, params, num_pages=args.num_pages,
+                      page_size=args.page_size, max_slots=args.max_slots,
+                      max_len=args.prompt_len + args.gen,
+                      attention=args.attention,
+                      decode_priority=args.decode_priority, seed=args.seed)
     t0 = time.time()
-    tokens = generate(model, cfg, params, prompts, args.gen)
+    for r in range(args.batch):
+        eng.submit(Request(rid=r, prompt=np.asarray(prompts[r]),
+                           max_new_tokens=args.gen,
+                           temperature=args.temperature, seed=r,
+                           arrival=time.time()))
+    results = eng.run()
     dt = time.time() - t0
-    print(f"generated {tokens.shape} in {dt:.2f}s "
-          f"({args.batch*args.gen/dt:.1f} tok/s)")
-    print(np.asarray(tokens[:2]))
-    return tokens
+    n_tok = sum(len(r.tokens) for r in results.values())
+    print(f"served {args.batch} requests / {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s, engine={args.engine}, "
+          f"attention={args.attention})")
+    for r in sorted(results.values(), key=lambda r: r.rid)[:2]:
+        print(f"  rid={r.rid} [{r.finish_reason}] {r.tokens}")
+    return results
 
 
 if __name__ == "__main__":

@@ -144,13 +144,11 @@ def _positions(pos0, S, B):
     return pos0 + jnp.arange(S, dtype=jnp.int32)
 
 
-def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
-              cache_len=None):
-    """Full forward (cache=None) or decode step / prefill-with-cache.
+def gqa_project(params, cfg: ModelConfig, x, q_pos, *, positions=None):
+    """Project x → rope'd (q, k, v).  q_pos: (B, S) absolute positions.
 
-    x: (B, S, d).  When ``cache`` is given it is a dict {k, v} of
-    (B, max_len, KV, hd); ``cache_len`` is the number of valid tokens already
-    in it.  Returns (out, new_cache).
+    Shared by the oracle paths below and the paged-KV serving runner
+    (``repro.serve.runner``) so both produce bit-identical projections.
     """
     B, S, d = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -162,16 +160,31 @@ def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, KV, hd)
     v = v.reshape(B, S, KV, hd)
-
-    pos0 = jnp.asarray(0, jnp.int32) if cache_len is None else cache_len
-    q_pos = pos0 + jnp.arange(S, dtype=jnp.int32)
     if cfg.rope == "rope":
-        q = apply_rope(q, jnp.broadcast_to(q_pos, (B, S)), cfg.rope_theta)
-        k = apply_rope(k, jnp.broadcast_to(q_pos, (B, S)), cfg.rope_theta)
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
     elif cfg.rope == "mrope":
-        p3 = jnp.broadcast_to(q_pos, (3, B, S)) if positions is None else positions
+        p3 = (jnp.broadcast_to(q_pos, (3, B, S))
+              if positions is None else positions)
         q = apply_mrope(q, p3, cfg.rope_theta)
         k = apply_mrope(k, p3, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
+              cache_len=None):
+    """Full forward (cache=None) or decode step / prefill-with-cache.
+
+    x: (B, S, d).  When ``cache`` is given it is a dict {k, v} of
+    (B, max_len, KV, hd); ``cache_len`` is the number of valid tokens already
+    in it.  Returns (out, new_cache).
+    """
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pos0 = jnp.asarray(0, jnp.int32) if cache_len is None else cache_len
+    q_pos = pos0 + jnp.arange(S, dtype=jnp.int32)
+    q, k, v = gqa_project(params, cfg, x, jnp.broadcast_to(q_pos, (B, S)),
+                          positions=positions)
 
     scale = 1.0 / math.sqrt(hd)
     if cache is None:
@@ -221,6 +234,47 @@ def gqa_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32
 
 # ======================================================================== MLA
 
+def mla_project(params, cfg: ModelConfig, x, q_pos):
+    """Latent-form MLA projections.  q_pos: (B, S) absolute positions.
+
+    Returns (q_full (B,S,H,lora+rope), c_kv (B,S,lora), k_rope (B,S,rope)) —
+    q_nope already absorbed through W_UK into the latent space.  Shared by
+    ``mla_apply`` and the paged-KV serving runner.
+    """
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    nope, rope_d, lora = m.qk_nope_head_dim, m.qk_rope_head_dim, m.kv_lora_rank
+
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,re->bse", cq, params["w_uq"]).reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    c_kv = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]),
+                   cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])        # shared, (B,S,rope_d)
+
+    q_rope = apply_rope(q_rope, q_pos, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], q_pos, cfg.rope_theta)[:, :, 0, :]
+
+    # absorb q_nope into latent space: (B,S,H,lora)
+    w_uk = params["w_uk"].reshape(lora, H, nope)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+    q_full = jnp.concatenate([q_lat, q_rope], axis=-1)           # (B,S,H,lora+rope)
+    return q_full, c_kv, k_rope
+
+
+def mla_output(params, cfg: ModelConfig, out_lat):
+    """Decompress attended latents (B,S,H,lora) through W_UV then W_O."""
+    m = cfg.mla
+    B, S, H = out_lat.shape[:3]
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", out_lat, w_uv).reshape(
+        B, S, H * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"])
+
+
 def mla_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
               cache_len=None):
     """DeepSeek multi-head latent attention, latent (weight-absorbed) form.
@@ -232,29 +286,12 @@ def mla_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
     """
     m = cfg.mla
     B, S, d = x.shape
-    H = cfg.n_heads
-    nope, rope_d, vdim, lora = (m.qk_nope_head_dim, m.qk_rope_head_dim,
-                                m.v_head_dim, m.kv_lora_rank)
-
-    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
-                 cfg.norm_eps)
-    q = jnp.einsum("bsr,re->bse", cq, params["w_uq"]).reshape(B, S, H, nope + rope_d)
-    q_nope, q_rope = q[..., :nope], q[..., nope:]
-
-    c_kv = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]),
-                   cfg.norm_eps)
-    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])        # shared, (B,S,rope_d)
+    nope, rope_d = m.qk_nope_head_dim, m.qk_rope_head_dim
 
     pos0 = jnp.asarray(0, jnp.int32) if cache_len is None else cache_len
     q_pos = pos0 + jnp.arange(S, dtype=jnp.int32)
-    q_rope = apply_rope(q_rope, jnp.broadcast_to(q_pos, (B, S)), cfg.rope_theta)
-    k_rope = apply_rope(k_rope[:, :, None, :], jnp.broadcast_to(q_pos, (B, S)),
-                        cfg.rope_theta)[:, :, 0, :]
-
-    # absorb q_nope into latent space: (B,S,H,lora)
-    w_uk = params["w_uk"].reshape(lora, H, nope)
-    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
-    q_full = jnp.concatenate([q_lat, q_rope], axis=-1)           # (B,S,H,lora+rope)
+    q_full, c_kv, k_rope = mla_project(params, cfg, x,
+                                       jnp.broadcast_to(q_pos, (B, S)))
 
     if cache is None:
         kv_lat, kv_rope, k_pos = c_kv, k_rope, jnp.arange(S, dtype=jnp.int32)
@@ -280,9 +317,7 @@ def mla_apply(params, cfg: ModelConfig, x, *, positions=None, cache=None,
     scale = 1.0 / math.sqrt(nope + rope_d)
     out_lat = attend(q_full, k_full, kv_lat[:, :, None, :], q_pos, k_pos,
                      0, scale)                                   # (B,S,H,lora)
-    w_uv = params["w_uv"].reshape(lora, H, vdim)
-    out = jnp.einsum("bshr,rhv->bshv", out_lat, w_uv).reshape(B, S, H * vdim)
-    return jnp.einsum("bse,ed->bsd", out, params["w_o"]), new_cache
+    return mla_output(params, cfg, out_lat), new_cache
 
 
 def mla_cache_init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):

@@ -1,0 +1,23 @@
+"""Serving engine: continuous batching over a paged KV cache.
+
+Layers (bottom-up):
+  allocator — host-side free-list :class:`PageAllocator` (trash page 0,
+              ref-counted sharing)
+  runner    — paged model execution: prefill-into-pages (reusing the oracle
+              ``transformer.prefill``), paged decode step (Pallas kernel in
+              ``repro.kernels.paged_attention`` or dense gather reference)
+  sampling  — per-request RNG streams (batch-composition independent)
+  engine    — :class:`ServeEngine`: admission / batched decode / eviction /
+              compaction scheduler
+
+Proven bit-equal to the static-batch oracle (``repro.launch.serve.generate``)
+by ``tests/test_serve.py``.
+"""
+from repro.serve.allocator import OutOfPages, PageAllocator, TRASH_PAGE
+from repro.serve.engine import Request, RequestResult, ServeEngine
+from repro.serve.runner import check_servable, init_pages
+from repro.serve.sampling import request_key, sample_tokens
+
+__all__ = ["OutOfPages", "PageAllocator", "TRASH_PAGE", "Request",
+           "RequestResult", "ServeEngine", "check_servable", "init_pages",
+           "request_key", "sample_tokens"]

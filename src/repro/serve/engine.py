@@ -1,0 +1,266 @@
+"""Continuous-batching scheduler over the paged-KV runner.
+
+One :class:`ServeEngine` owns the page pools, a :class:`PageAllocator`, an
+admission queue, and the active slot list.  Each :meth:`step` interleaves:
+
+* **admission** — pop queued requests while a slot is free and the pool can
+  *guarantee* the request to completion (pages for prompt + max_new_tokens
+  are reserved up front; only the prompt's pages are allocated eagerly, the
+  rest lazily at page boundaries — reservation means admission can never
+  deadlock mid-decode).  A ``decode_priority`` knob throttles prefills: at
+  priority k, at most one admission per k decode steps while traffic is
+  active, keeping per-token latency bounded under bursts.
+* **decode** — one batched decode step for all active sequences.  The batch
+  is padded to the next power-of-two bucket (bounding jit retraces); padded
+  rows point every block-table slot at the trash page with length 0, and
+  row independence (see ``runner``) makes them inert.
+* **eviction + compaction** — sequences finishing on EOS or max_new_tokens
+  free their pages and leave; the active list is rebuilt dense (order
+  preserved), so the decode batch never carries holes.
+
+Token streams are deterministic: greedy rows depend only on the model, and
+sampled rows use per-request RNG streams (``repro.serve.sampling``) that
+depend only on (engine base seed, request seed, tokens generated), never on
+co-batched traffic.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import runner
+from repro.serve.allocator import PageAllocator
+from repro.serve.sampling import request_key, sample_tokens
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (P,) int32, P >= 1
+    max_new_tokens: int
+    temperature: float = 0.0
+    seed: int = 0
+    eos_id: int | None = None
+    arrival: float = 0.0                # wall-clock submit time (bench)
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    tokens: list[int] = field(default_factory=list)
+    arrival: float = 0.0
+    admitted: float = 0.0
+    token_times: list[float] = field(default_factory=list)
+    prompt_len: int = 0
+    finish_reason: str = ""             # "eos" | "length"
+
+
+class _Seq:
+    __slots__ = ("req", "pages", "length", "n_gen", "last_token", "key",
+                 "reserve_left", "result")
+
+    def __init__(self, req, pages, key, reserve_left, result):
+        self.req = req
+        self.pages = pages              # allocated page ids, in order
+        self.length = len(req.prompt)   # tokens currently in the KV cache
+        self.n_gen = 0                  # tokens emitted so far
+        self.last_token = -1
+        self.key = key                  # per-request RNG root (2,) uint32
+        self.reserve_left = reserve_left
+        self.result = result
+
+
+def _bucket(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+class ServeEngine:
+    """Continuous batching + paged KV cache serving engine."""
+
+    def __init__(self, model, cfg, params, *, num_pages: int = 64,
+                 page_size: int = 8, max_slots: int = 8, max_len: int = 128,
+                 attention: str = "paged", decode_priority: int = 1,
+                 seed: int = 0, interpret=None, clock=time.time):
+        runner.check_servable(cfg)
+        del model                        # runner drives `cfg` + params directly
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_len = max_len
+        self.max_pages_per_seq = -(-max_len // page_size)
+        self.max_slots = max_slots
+        self.decode_priority = max(0, decode_priority)
+        self.attention = attention
+        self.clock = clock
+        self.alloc = PageAllocator(num_pages, page_size)
+        self.pages = runner.init_pages(cfg, num_pages, page_size)
+        self._prefill = runner.get_prefill_fn(cfg, page_size=page_size)
+        self._decode = runner.get_decode_fn(cfg, page_size=page_size,
+                                            attention_impl=attention,
+                                            interpret=interpret)
+        self._base_key = jax.random.PRNGKey(seed)
+        self.pending: deque[Request] = deque()
+        self.active: list[_Seq] = []
+        self.results: dict[int, RequestResult] = {}
+        self._reserved = 0               # pages promised but not yet allocated
+        self._steps_since_admit = 10 ** 9
+        self.n_steps = 0
+
+    # ------------------------------------------------------------- public API
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) < 1:
+            raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        total = len(req.prompt) + req.max_new_tokens
+        if total > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new={total} exceeds "
+                f"max_len={self.max_len}")
+        if self.alloc.pages_for(total) > self.alloc.num_pages - 1:
+            raise ValueError(f"request {req.rid} can never fit the pool")
+        self.pending.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.pending and not self.active
+
+    def step(self) -> None:
+        """One scheduler tick: maybe admit, then one batched decode step."""
+        self._admit()
+        if self.active:
+            self._decode_step()
+        self.n_steps += 1
+
+    def run(self, max_steps: int = 1_000_000) -> dict[int, RequestResult]:
+        """Drive to completion of everything submitted so far."""
+        for _ in range(max_steps):
+            if self.idle:
+                return self.results
+            self.step()
+        raise RuntimeError(f"engine not idle after {max_steps} steps")
+
+    def serve(self, requests, arrival_steps=None) -> dict[int, RequestResult]:
+        """Deterministic schedule driver: submit ``requests[i]`` when the
+        engine reaches step ``arrival_steps[i]`` (default: all at step 0).
+        Used by the oracle-equivalence tests to pin staggered admission."""
+        arrival_steps = list(arrival_steps or [0] * len(requests))
+        order = sorted(range(len(requests)), key=lambda i: arrival_steps[i])
+        i = 0
+        while i < len(order) or not self.idle:
+            while i < len(order) and self.n_steps >= arrival_steps[order[i]]:
+                self.submit(requests[order[i]])
+                i += 1
+            if self.idle and i < len(order):
+                self.n_steps = arrival_steps[order[i]]   # jump idle gaps
+                continue
+            self.step()
+        return self.results
+
+    # -------------------------------------------------------------- admission
+    def _admit(self) -> None:
+        admitted = 0
+        while self.pending and len(self.active) < self.max_slots:
+            if self.active and (admitted >= 1 or
+                                self._steps_since_admit < self.decode_priority):
+                break
+            req = self.pending[0]
+            need = self.alloc.pages_for(len(req.prompt) + req.max_new_tokens)
+            if need > self.alloc.free_pages - self._reserved:
+                break                    # head-of-line waits for evictions
+            self.pending.popleft()
+            self._start(req)
+            admitted += 1
+            self._steps_since_admit = 0
+        if admitted == 0:
+            self._steps_since_admit += 1
+
+    def _start(self, req: Request) -> None:
+        now = self.clock()
+        P = len(req.prompt)
+        need = self.alloc.pages_for(P + req.max_new_tokens)
+        prompt_pages = self.alloc.pages_for(P)
+        pages = self.alloc.alloc(prompt_pages)
+        self._reserved += need - prompt_pages
+
+        table = np.zeros((self.max_pages_per_seq,), np.int32)
+        table[:len(pages)] = pages
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, self.pages = self._prefill(self.params, self.pages, prompt,
+                                           jnp.asarray(table))
+
+        result = RequestResult(rid=req.rid, arrival=req.arrival, admitted=now,
+                               prompt_len=P)
+        key = np.asarray(request_key(self._base_key, req.seed))
+        seq = _Seq(req, pages, key, need - prompt_pages, result)
+        tok = int(np.asarray(sample_tokens(
+            logits, jnp.asarray(key)[None],
+            jnp.zeros((1,), jnp.int32),
+            jnp.full((1,), req.temperature, jnp.float32)))[0])
+        self.results[req.rid] = result
+        if not self._emit(seq, tok, self.clock()):
+            self.active.append(seq)
+
+    # ----------------------------------------------------------------- decode
+    def _decode_step(self) -> None:
+        acts = self.active
+        for s in acts:                   # lazy page growth at boundaries
+            while len(s.pages) * self.page_size <= s.length:
+                s.pages.extend(self.alloc.alloc(1))
+                s.reserve_left -= 1
+                self._reserved -= 1
+
+        B = len(acts)
+        bucket = _bucket(B, self.max_slots)
+        tokens = np.zeros((bucket,), np.int32)
+        lengths = np.zeros((bucket,), np.int32)
+        tables = np.zeros((bucket, self.max_pages_per_seq), np.int32)
+        keys = np.zeros((bucket, 2), np.uint32)
+        steps = np.zeros((bucket,), np.int32)
+        temps = np.zeros((bucket,), np.float32)
+        for i, s in enumerate(acts):
+            tokens[i] = s.last_token
+            lengths[i] = s.length
+            tables[i, :len(s.pages)] = s.pages
+            keys[i] = s.key
+            steps[i] = s.n_gen
+            temps[i] = s.req.temperature
+
+        logits, self.pages = self._decode(
+            self.params, self.pages, jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(tables))
+        toks = np.asarray(sample_tokens(logits, jnp.asarray(keys),
+                                        jnp.asarray(steps),
+                                        jnp.asarray(temps)))
+        now = self.clock()
+        survivors = []
+        for i, s in enumerate(acts):
+            s.length += 1                # the fed token's KV is cached now
+            if not self._emit(s, int(toks[i]), now):
+                survivors.append(s)
+        self.active = survivors          # compaction: dense, order-preserving
+
+    def _emit(self, seq: _Seq, tok: int, now: float) -> bool:
+        """Record one generated token; finish (and free) on EOS/len.
+        Returns True when the sequence left the engine."""
+        seq.n_gen += 1
+        seq.last_token = tok
+        seq.result.tokens.append(tok)
+        seq.result.token_times.append(now)
+        done_eos = seq.req.eos_id is not None and tok == seq.req.eos_id
+        done_len = seq.n_gen >= seq.req.max_new_tokens
+        if done_eos or done_len:
+            seq.result.finish_reason = "eos" if done_eos else "length"
+            self.alloc.free(seq.pages)
+            self._reserved -= seq.reserve_left
+            seq.reserve_left = 0
+            return True
+        return False

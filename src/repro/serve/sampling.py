@@ -1,0 +1,42 @@
+"""Per-sequence RNG streams for serving.
+
+The RNG stream of a request must depend only on (base key, request seed,
+tokens generated so far) — never on which other sequences share the decode
+batch or which slot the request occupies.  That makes seeded sampling
+deterministic under continuous batching: the scheduler can admit/evict/
+compact freely and every request still sees the exact token stream it would
+see alone (``tests/test_serve.py`` pins this).
+
+``sample_tokens`` is shared by the static-batch oracle
+(``repro.launch.serve.generate``) and the continuous engine, so the two are
+stream-identical by construction for equal (seed, step) pairs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_key(base_key, seed):
+    """The root RNG key of one request: fold its seed into the base key."""
+    return jax.random.fold_in(base_key, seed)
+
+
+def _sample_one(key, step, logits, temp):
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    k = jax.random.fold_in(key, step)            # stream position = step
+    sampled = jax.random.categorical(
+        k, logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+    ).astype(jnp.int32)
+    return jnp.where(temp > 0.0, sampled, greedy)
+
+
+@jax.jit
+def sample_tokens(logits, keys, steps, temps):
+    """Row-wise next-token choice.
+
+    logits (B, V) · keys (B, 2) uint32 request keys · steps (B,) int32
+    tokens-generated-so-far · temps (B,) f32.  temp == 0 rows take argmax;
+    temp > 0 rows sample ``categorical(fold_in(key, step), logits/temp)``.
+    """
+    return jax.vmap(_sample_one)(keys, steps, logits, temps)

@@ -48,8 +48,8 @@ def test_workflow_parses_with_all_triggers(wf):
     assert set(trig) >= {"push", "pull_request", "workflow_dispatch",
                          "schedule"}
     assert trig["schedule"], "nightly leg needs a cron schedule"
-    assert set(wf["jobs"]) >= {"tests", "bench-smoke", "lint",
-                               "nightly-slow", "recovery-drill",
+    assert set(wf["jobs"]) >= {"tests", "bench-smoke", "serve-smoke",
+                               "lint", "nightly-slow", "recovery-drill",
                                "recovery-drill-tpu"}
 
 
@@ -70,10 +70,10 @@ def test_kernel_leg_sets_interpret_mode_explicitly(wf):
 
 
 def test_test_jobs_pin_cpu_backend_and_jax_wheel(wf):
-    for name in ("tests", "bench-smoke", "nightly-slow"):
+    for name in ("tests", "bench-smoke", "serve-smoke", "nightly-slow"):
         assert wf["jobs"][name]["env"]["JAX_PLATFORMS"] == "cpu", name
     # pip caching keyed on the pinned requirements file
-    for name in ("tests", "bench-smoke", "nightly-slow"):
+    for name in ("tests", "bench-smoke", "serve-smoke", "nightly-slow"):
         setup = [s for s in _steps(wf["jobs"][name])
                  if "setup-python" in s.get("uses", "")][0]
         assert setup["with"]["cache"] == "pip", name
@@ -100,6 +100,18 @@ def test_bench_smoke_job_gates_schema_and_uploads_artifact(wf):
     uploads = [s for s in _steps(job)
                if "upload-artifact" in s.get("uses", "")]
     assert uploads and uploads[0]["with"]["path"] == "BENCH_tl_step_smoke.json"
+
+
+def test_serve_smoke_job_gates_schema_and_uploads_artifact(wf):
+    job = wf["jobs"]["serve-smoke"]
+    runs = " ".join(_run_lines(job))
+    assert "benchmarks/run.py --only serve_smoke" in runs
+    assert "check_artifact_schema.py" in runs
+    assert "benchmarks/schemas/serve_smoke.schema.json" in runs
+    uploads = [s for s in _steps(job)
+               if "upload-artifact" in s.get("uses", "")]
+    assert uploads and uploads[0]["with"]["path"] == "BENCH_serve_smoke.json"
+    assert uploads[0]["if"] == "always()"
 
 
 def test_recovery_drill_job_verifies_the_elastic_guarantee(wf):
@@ -158,6 +170,30 @@ def test_committed_artifact_matches_committed_schema():
                    str(ROOT / "benchmarks" / "schemas"
                        / "tl_step_smoke.schema.json")])
     assert rc == 0
+
+
+def test_committed_serve_artifact_matches_committed_schema():
+    """The serve-smoke CI gate, run locally: the committed artifact and
+    schema agree, and numeric offered-load keys are wildcarded so changing
+    the load grid is not drift."""
+    mod = _checker()
+    schema = str(ROOT / "benchmarks" / "schemas" / "serve_smoke.schema.json")
+    assert mod.main([str(ROOT / "BENCH_serve_smoke.json"),
+                     "--schema", schema]) == 0
+    art = json.loads((ROOT / "BENCH_serve_smoke.json").read_text())
+    loads = art["result"]["archs"]["deepseek-7b"]["loads"]
+    loads["64.0"] = next(iter(loads.values()))    # extra load point: fine
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        p = pathlib.Path(d) / "sweep.json"
+        p.write_text(json.dumps(art))
+        assert mod.main([str(p), "--schema", schema]) == 0
+        broken = json.loads((ROOT / "BENCH_serve_smoke.json").read_text())
+        for point in broken["result"]["archs"]["deepseek-7b"][
+                "loads"].values():
+            point.pop("p99_token_latency_ms")     # dropped metric: drift
+        p.write_text(json.dumps(broken))
+        assert mod.main([str(p), "--schema", schema]) == 1
 
 
 def test_schema_drift_is_detected(tmp_path):

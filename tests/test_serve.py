@@ -1,0 +1,443 @@
+"""Serving engine correctness: allocator properties, kernel equivalence,
+continuous-batching oracle identity, sampling determinism.
+
+The load-bearing guarantees (ISSUE 7 acceptance criteria):
+
+* :class:`repro.serve.PageAllocator` never double-allocates or leaks pages
+  across any alloc/free interleaving (hypothesis property tests);
+* the Pallas paged-attention decode kernel matches dense attention to
+  f32-ULP tolerance over a grid of shapes / shuffled block tables / ragged
+  lengths (GQA and MLA fused-pool modes);
+* continuous-batched greedy decoding is **token-identical** to the
+  per-sequence static-batch oracle (``repro.launch.serve.generate``) across
+  staggered admission/eviction schedules, ragged prompts, mid-stream EOS,
+  single-token sequences, and both attention paths;
+* seeded ``temperature>0`` streams depend only on (base key, request seed,
+  step) — never on co-batched traffic — and equal the oracle's streams.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.launch.serve as launch_serve
+from repro.configs import get_config
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_decode_attention_ref)
+from repro.models import build_model
+from repro.serve import (OutOfPages, PageAllocator, Request, ServeEngine,
+                         TRASH_PAGE, check_servable)
+
+PAGE = 4          # one page size across tests -> shared decode-fn compiles
+POOL = 32
+
+_SETUPS: dict = {}    # plain cache: @given-wrapped tests can't take fixtures
+
+
+def _get_setup(arch):
+    if arch not in _SETUPS:
+        cfg = get_config(arch, reduced=True)
+        model = build_model(cfg)
+        _SETUPS[arch] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+    return _SETUPS[arch]
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    return _get_setup("deepseek-7b")
+
+
+@pytest.fixture(scope="module")
+def mla_setup():
+    return _get_setup("deepseek-v2-236b")
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(p,)).astype(np.int32)
+            for p in lens]
+
+
+def _oracle(model, cfg, params, prompt, gen, temperature=0.0, seed=0):
+    toks = launch_serve.generate(
+        model, cfg, params, jnp.asarray(prompt)[None], gen,
+        temperature=temperature, key=jax.random.PRNGKey(0), seeds=[seed])
+    return [int(t) for t in np.asarray(toks)[0]]
+
+
+def _engine(cfg, model, params, **kw):
+    kw.setdefault("num_pages", POOL)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 32)
+    return ServeEngine(model, cfg, params, **kw)
+
+
+# ===================================================== allocator properties
+
+class TestPageAllocator:
+    def test_trash_page_never_handed_out(self):
+        alloc = PageAllocator(8, PAGE)
+        pages = alloc.alloc(7)                    # the whole allocatable pool
+        assert TRASH_PAGE not in pages
+        assert sorted(pages) == list(range(1, 8))
+        with pytest.raises(OutOfPages):
+            alloc.alloc(1)
+
+    def test_double_free_raises(self):
+        alloc = PageAllocator(8, PAGE)
+        pages = alloc.alloc(2)
+        alloc.free(pages)
+        with pytest.raises(KeyError):
+            alloc.free(pages)
+
+    def test_refcounted_sharing(self):
+        alloc = PageAllocator(8, PAGE)
+        pages = alloc.alloc(3)
+        alloc.share(pages)                        # refcount 2
+        alloc.free(pages)                         # still live
+        assert alloc.live_pages == 3 and alloc.free_pages == 4
+        alloc.free(pages)                         # refcount 0 -> returned
+        assert alloc.live_pages == 0 and alloc.free_pages == 7
+
+    @given(ops=st.lists(st.tuples(st.booleans(), st.integers(1, 5)),
+                        min_size=1, max_size=60))
+    @settings(max_examples=40, deadline=None)
+    def test_alloc_free_exactly_once_and_conserved(self, ops):
+        """Any alloc/free interleaving: no page is ever handed out twice
+        concurrently, block tables stay disjoint, and the free list is
+        conserved (free + live == capacity) after every operation."""
+        alloc = PageAllocator(16, PAGE)
+        tables = []                               # outstanding allocations
+        for is_alloc, n in ops:
+            if is_alloc:
+                try:
+                    pages = alloc.alloc(n)
+                except OutOfPages:
+                    assert alloc.free_pages < n
+                    continue
+                live = {p for t in tables for p in t}
+                assert len(set(pages)) == len(pages)
+                assert not set(pages) & live      # disjoint block tables
+                assert TRASH_PAGE not in pages
+                tables.append(pages)
+            elif tables:
+                alloc.free(tables.pop(n % len(tables)))
+            assert alloc.free_pages + alloc.live_pages == alloc.num_pages - 1
+            assert alloc.live_pages == len({p for t in tables for p in t})
+        for t in tables:
+            alloc.free(t)
+        assert alloc.free_pages == alloc.num_pages - 1
+        assert alloc.live_pages == 0
+
+
+# ============================================ paged kernel vs dense oracle
+
+KERNEL_GRID = [
+    # B, H, KV, d,  page, maxp
+    (3, 4, 2, 16, 4, 4),          # GQA
+    (2, 8, 8, 32, 8, 2),          # MHA
+    (1, 4, 1, 64, 4, 3),          # MQA
+    (4, 4, 4, 16, 4, 5),          # bigger batch
+]
+
+
+@pytest.mark.parametrize("B,H,KV,d,page,maxp", KERNEL_GRID)
+def test_paged_kernel_matches_dense_ref(B, H, KV, d, page, maxp):
+    rng = np.random.default_rng(B * 100 + H)
+    P = B * maxp + 1
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    # shuffled, non-contiguous block tables (page 0 kept as trash)
+    bt = jnp.asarray(rng.permutation(np.arange(1, P))[:B * maxp]
+                     .reshape(B, maxp), jnp.int32)
+    # ragged lengths: 1, a page boundary, full, and something in between
+    lens = np.ones((B,), np.int32)
+    lens[1 % B] = page                            # exact page boundary
+    lens[(2 % B)] = maxp * page                   # completely full
+    if B > 3:
+        lens[3] = page + 1
+    lens = jnp.asarray(lens)
+    out = paged_decode_attention(q, kp, vp, bt, lens, scale=d ** -0.5)
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lens, scale=d ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_paged_kernel_mla_fused_pool():
+    """MLA mode: one fused c_kv‖k_rope pool, values = latent prefix."""
+    rng = np.random.default_rng(7)
+    B, H, lora, rope, page, maxp = 3, 4, 32, 16, 4, 4
+    d = lora + rope
+    P = B * maxp + 1
+    kp = jnp.asarray(rng.normal(size=(P, page, 1, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    bt = jnp.asarray(rng.permutation(np.arange(1, P))[:B * maxp]
+                     .reshape(B, maxp), jnp.int32)
+    lens = jnp.asarray([1, page, maxp * page], jnp.int32)
+    out = paged_decode_attention(q, kp, None, bt, lens, scale=d ** -0.5,
+                                 v_width=lora)
+    ref = paged_decode_attention_ref(q, kp, None, bt, lens, scale=d ** -0.5,
+                                     v_width=lora)
+    assert out.shape == (B, H, lora)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_trash_page_contents_cannot_leak():
+    """Garbage in page 0 (inactive-slot writes land there) must never move
+    a live sequence's output: masked positions contribute exactly zero."""
+    rng = np.random.default_rng(9)
+    B, H, KV, d, page, maxp = 2, 4, 2, 16, 4, 3
+    P = B * maxp + 1
+    kp = jnp.asarray(rng.normal(size=(P, page, KV, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page, KV, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, H, d)), jnp.float32)
+    bt = np.arange(1, 1 + B * maxp, dtype=np.int32).reshape(B, maxp)
+    bt[:, -1] = TRASH_PAGE                        # tail slots -> trash
+    lens = jnp.asarray([3, 2 * page], jnp.int32)  # never reach the tail page
+    base = paged_decode_attention(q, kp, vp, jnp.asarray(bt), lens,
+                                  scale=d ** -0.5)
+    kp2 = kp.at[TRASH_PAGE].set(1e6)              # poison the trash page
+    vp2 = vp.at[TRASH_PAGE].set(-1e6)
+    poisoned = paged_decode_attention(q, kp2, vp2, jnp.asarray(bt), lens,
+                                      scale=d ** -0.5)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(poisoned))
+
+
+# ================================== continuous batching == static oracle
+
+SCHEDULES = {
+    "all_at_once": [0, 0, 0, 0],
+    "staggered": [0, 2, 3, 9],
+    "serialized": [0, 40, 80, 120],
+}
+
+
+@pytest.mark.parametrize("attention", ["dense", "paged"])
+@pytest.mark.parametrize("schedule", sorted(SCHEDULES))
+def test_engine_greedy_token_identical(dense_setup, attention, schedule):
+    """Ragged prompts (incl. single-token) under every admission schedule:
+    the engine's greedy streams equal per-sequence static-batch decoding."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 1, 9, 3])
+    gens = [6, 4, 8, 3]
+    eng = _engine(cfg, model, params, attention=attention)
+    reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=gens[i])
+            for i in range(4)]
+    res = eng.serve(reqs, arrival_steps=SCHEDULES[schedule])
+    for i in range(4):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i],
+                                        gens[i]), (attention, schedule, i)
+        assert res[i].finish_reason == "length"
+    # no leaks: every page freed, every reservation released
+    assert eng.alloc.live_pages == 0
+    assert eng.alloc.free_pages == eng.alloc.num_pages - 1
+    assert eng._reserved == 0
+
+
+def test_engine_mla_arch_token_identical(mla_setup):
+    """The MLA+MoE arch (fused latent pool, v_width kernel mode) through
+    the full engine, staggered."""
+    cfg, model, params = mla_setup
+    prompts = _prompts(cfg, [5, 3, 8])
+    gens = [5, 6, 4]
+    eng = _engine(cfg, model, params, attention="paged")
+    res = eng.serve([Request(rid=i, prompt=prompts[i], max_new_tokens=gens[i])
+                     for i in range(3)], arrival_steps=[0, 1, 4])
+    for i in range(3):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i],
+                                        gens[i]), i
+
+
+def test_engine_mid_stream_eos(dense_setup):
+    """EOS mid-stream evicts the sequence and frees its pages; the emitted
+    stream is the oracle's, truncated inclusively at the EOS token."""
+    cfg, model, params = dense_setup
+    [prompt] = _prompts(cfg, [5])
+    full = _oracle(model, cfg, params, prompt, 8)
+    eos = full[2]                        # a token the greedy stream emits
+    cut = full.index(eos) + 1            # engine stops at first occurrence
+    assert cut < len(full)
+    eng = _engine(cfg, model, params)
+    res = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=8,
+                             eos_id=eos)])
+    assert res[0].tokens == full[:cut]
+    assert res[0].finish_reason == "eos"
+    assert eng.alloc.live_pages == 0 and eng._reserved == 0
+
+
+def test_engine_single_token_sequences(dense_setup):
+    """max_new_tokens=1 finishes straight out of prefill (never enters the
+    decode batch), co-scheduled with longer traffic."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [4, 6, 2])
+    eng = _engine(cfg, model, params)
+    res = eng.serve([
+        Request(rid=0, prompt=prompts[0], max_new_tokens=1),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=5),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=1),
+    ], arrival_steps=[0, 0, 2])
+    assert res[0].tokens == _oracle(model, cfg, params, prompts[0], 1)
+    assert res[1].tokens == _oracle(model, cfg, params, prompts[1], 5)
+    assert res[2].tokens == _oracle(model, cfg, params, prompts[2], 1)
+    assert res[0].finish_reason == "length" and len(res[0].tokens) == 1
+
+
+def test_engine_capacity_backpressure(dense_setup):
+    """A pool that fits ~one sequence serializes admissions (head-of-line
+    waits for eviction) without corrupting any stream."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 7, 3])
+    gens = [6, 4, 5]
+    # pages_for(max P+gen)=pages_for(11)=3 -> pool of 4 allocatable fits one
+    # sequence plus slack but never two
+    eng = _engine(cfg, model, params, num_pages=5, max_len=12)
+    res = eng.serve([Request(rid=i, prompt=prompts[i], max_new_tokens=gens[i])
+                     for i in range(3)])
+    for i in range(3):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i],
+                                        gens[i]), i
+    assert eng.alloc.live_pages == 0 and eng._reserved == 0
+
+
+def test_engine_rejects_impossible_requests(dense_setup):
+    cfg, model, params = dense_setup
+    eng = _engine(cfg, model, params, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.zeros((10,), np.int32),
+                           max_new_tokens=8))     # 18 > max_len
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=1, prompt=np.zeros((0,), np.int32),
+                           max_new_tokens=2))
+
+
+@given(plens=st.lists(st.integers(1, 9), min_size=1, max_size=4),
+       arrivals=st.lists(st.integers(0, 12), min_size=4, max_size=4),
+       gens=st.lists(st.integers(1, 6), min_size=4, max_size=4))
+@settings(max_examples=5, deadline=None)
+def test_engine_random_schedules_property(plens, arrivals, gens):
+    """Hypothesis-driven admit/evict schedules: token identity + page
+    conservation hold for arbitrary ragged traffic."""
+    cfg, model, params = _get_setup("deepseek-7b")
+    prompts = _prompts(cfg, plens, seed=sum(plens))
+    n = len(prompts)
+    eng = _engine(cfg, model, params)
+    res = eng.serve([Request(rid=i, prompt=prompts[i],
+                             max_new_tokens=gens[i]) for i in range(n)],
+                    arrival_steps=arrivals[:n])
+    for i in range(n):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i],
+                                        gens[i]), i
+    assert eng.alloc.live_pages == 0
+    assert eng.alloc.free_pages == eng.alloc.num_pages - 1
+    assert eng._reserved == 0
+
+
+# ======================================== sampling determinism (temp > 0)
+
+def test_sampled_stream_independent_of_cobatch(dense_setup):
+    """A seeded temperature>0 request emits the same stream alone and
+    co-batched with unrelated traffic (per-request RNG streams)."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 9, 3])
+    solo = _engine(cfg, model, params)
+    a = solo.serve([Request(rid=0, prompt=prompts[0], max_new_tokens=6,
+                            temperature=0.8, seed=7)])[0].tokens
+    crowd = _engine(cfg, model, params)
+    b = crowd.serve([
+        Request(rid=0, prompt=prompts[0], max_new_tokens=6,
+                temperature=0.8, seed=7),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=8,
+                temperature=0.9, seed=11),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=4,
+                temperature=0.0, seed=13),
+    ], arrival_steps=[0, 0, 1])[0].tokens
+    assert a == b
+    assert len(a) == 6
+
+
+def test_sampled_stream_matches_oracle(dense_setup):
+    """Engine seeded stream == static-batch oracle seeded stream (same
+    base key, same request seed, same fold_in(step) positions)."""
+    cfg, model, params = dense_setup
+    [prompt] = _prompts(cfg, [5])
+    eng = _engine(cfg, model, params, seed=0)
+    got = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=6,
+                             temperature=0.8, seed=7)])[0].tokens
+    assert got == _oracle(model, cfg, params, prompt, 6, temperature=0.8,
+                          seed=7)
+
+
+def test_generate_survives_temperature_without_key(dense_setup):
+    """Seed-era bug: ``generate(..., temperature>0, key=None)`` crashed on
+    ``jax.random.split(None)``.  It must sample with the default key now."""
+    cfg, model, params = dense_setup
+    prompts = jnp.asarray(_prompts(cfg, [4, 4]))
+    toks = launch_serve.generate(model, cfg, params, prompts, 3,
+                                 temperature=0.7)
+    assert toks.shape == (2, 3)
+
+
+def test_generate_does_not_rejit_per_call(dense_setup, monkeypatch):
+    """Seed-era bug: the jitted serve step was rebuilt inside ``generate``
+    on every call.  It must come from the per-config cache."""
+    cfg, model, params = dense_setup
+    calls = []
+    orig = launch_serve.make_serve_step
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(launch_serve, "make_serve_step", counting)
+    launch_serve._STEP_CACHE.pop(cfg.name, None)
+    prompts = jnp.asarray(_prompts(cfg, [4, 4]))
+    launch_serve.generate(model, cfg, params, prompts, 2)
+    launch_serve.generate(model, cfg, params, prompts, 2)
+    launch_serve.generate(model, cfg, params, prompts, 3)
+    assert len(calls) == 1
+
+
+# =========================================================== servable gate
+
+@pytest.mark.parametrize("arch,reason", [
+    ("starcoder2-3b", "attention"),       # sliding-window ring cache
+    ("mamba2-780m", "mixer"),             # ssm mixer
+    ("qwen2-vl-72b", "mrope"),            # mrope positions
+    ("seamless-m4t-medium", "encoder"),   # enc-dec
+])
+def test_unservable_archs_raise(arch, reason):
+    cfg = get_config(arch, reduced=True)
+    with pytest.raises(ValueError, match="not servable"):
+        check_servable(cfg)
+    with pytest.raises(ValueError, match=reason):
+        check_servable(cfg)
+
+
+def test_servable_archs_pass():
+    for arch in ("deepseek-7b", "deepseek-v2-236b", "qwen2.5-32b"):
+        check_servable(get_config(arch, reduced=True))
+
+
+# ================================================================ CLI shim
+
+def test_cli_continuous_smoke(capsys):
+    res = launch_serve.main([
+        "--arch", "deepseek-7b", "--engine", "continuous",
+        "--attention", "paged", "--batch", "2", "--prompt-len", "4",
+        "--gen", "3", "--page-size", "4", "--num-pages", "32"])
+    assert len(res) == 2
+    assert all(len(r.tokens) == 3 for r in res.values())
+    assert "served 2 requests" in capsys.readouterr().out
+
+
+def test_cli_static_smoke(capsys):
+    toks = launch_serve.main([
+        "--arch", "deepseek-7b", "--batch", "2", "--prompt-len", "4",
+        "--gen", "3"])
+    assert toks.shape == (2, 3)
