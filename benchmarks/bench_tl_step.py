@@ -88,7 +88,7 @@ def _git_rev() -> str:
 
 def _build_orchestrator(n_nodes: int, *, fused: bool, pipelined: bool = False,
                         simulate_time: bool = False,
-                        reassembly: str = "xla"):
+                        reassembly: str = "xla", wire=None):
     from repro.configs.paper_models import DATRET
     from repro.core.node import TLNode
     from repro.core.orchestrator import TLOrchestrator
@@ -110,7 +110,7 @@ def _build_orchestrator(n_nodes: int, *, fused: bool, pipelined: bool = False,
         time_kw = dict(
             compute_time_fn=lambda k: SIM_COMPUTE_S_PER_SAMPLE * k,
             bp_time_fn=lambda n: SIM_BP_S_PER_SAMPLE * n)
-    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+    orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(wire=wire),
                           batch_size=BATCH_SIZE, seed=0,
                           fused=fused, donate=fused, pipelined=pipelined,
                           reassembly=reassembly, **time_kw)
@@ -138,6 +138,32 @@ def _measure(orch, epochs: int) -> float:
         steps += len(orch.train_epoch())
     jax.block_until_ready(orch.params)
     return steps / (time.perf_counter() - t0)
+
+
+def _wire_compression(n_nodes: int, epochs: int) -> dict:
+    """The compressed-traversal-wire column: steps/s, cumulative visit wire
+    bytes, and the measured raw/wire bytes ratio per rung on the fused
+    path.  The ratio is the bandwidth headline (the acceptance bar is
+    >=3.5x under int8); the steps/s shows the quant/dequant cost on this
+    backend.  Model-parameter bytes are identical across rungs by
+    construction (the "model" tag never quantizes)."""
+    from repro.core.transport import WirePolicy
+    col = {}
+    for key, pol in (("off", None),
+                     ("int8", WirePolicy.visits("int8")),
+                     ("fp8_ef", WirePolicy.visits("fp8",
+                                                  error_feedback=True))):
+        orch = _build_orchestrator(n_nodes, fused=True, wire=pol)
+        sps = _measure(orch, epochs)
+        tr = orch.transport
+        tag = "activations_grads"
+        col[key] = {
+            "steps_per_s": round(sps, 2),
+            "visit_bytes": tr.bytes_sent[tag],
+            "bytes_ratio": round(
+                tr.raw_bytes[tag] / max(tr.bytes_sent[tag], 1), 2),
+        }
+    return col
 
 
 def _simulated_clock(n_nodes: int, *, pipelined: bool) -> float:
@@ -393,6 +419,7 @@ def run(node_counts=(2, 4, 8), epochs: int = 3,
                          epochs)
         clock_serial = _simulated_clock(n, pipelined=False)
         clock_piped = _simulated_clock(n, pipelined=True)
+        wire = _wire_compression(n, epochs)
         results[str(n)] = {
             "eager_steps_per_s": round(eager, 2),
             "fused_steps_per_s": round(fused, 2),
@@ -405,11 +432,14 @@ def run(node_counts=(2, 4, 8), epochs: int = 3,
             "serial_clock_s": round(clock_serial, 4),
             "pipelined_clock_s": round(clock_piped, 4),
             "clock_speedup": round(clock_serial / clock_piped, 3),
+            "wire_compression": wire,
         }
         print(f"bench_tl_step/nodes={n},"
               f"{1e6 / fused:.0f},speedup={fused / eager:.2f}x,"
               f"reassembly_pallas={pallas:.2f}steps/s,"
-              f"clock={clock_serial:.3f}s->{clock_piped:.3f}s")
+              f"clock={clock_serial:.3f}s->{clock_piped:.3f}s,"
+              f"wire_int8={wire['int8']['bytes_ratio']}x,"
+              f"wire_fp8_ef={wire['fp8_ef']['bytes_ratio']}x")
     entry = {
         "git_rev": _git_rev(),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),

@@ -15,7 +15,7 @@ from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
 from repro.core.runtime_model import (WorkloadSpec, runtime_fl, runtime_sfl,
                                       runtime_sl, runtime_slp, runtime_tl)
-from repro.core.transport import NetworkModel, Transport
+from repro.core.transport import NetworkModel, Transport, WirePolicy
 from repro.data.datasets import shard_iid, tabular
 from repro.models.small import SmallModel
 from repro.optim import sgd
@@ -74,7 +74,8 @@ def simulated_rows(n_nodes=8, compress=False):
                 transport=tr)
     out["SFL"] = (tr.clock_s, tr.total_bytes)
 
-    tr = Transport(network=net, compress_activations=compress)
+    tr = Transport(network=net,
+                   wire=WirePolicy.visits("int8") if compress else None)
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=30,
                           seed=0, check_consistency=False,

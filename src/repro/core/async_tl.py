@@ -146,7 +146,7 @@ def async_train_epoch(orch, *, min_contributions: Optional[int] = None,
                             "activations_grads",
                             {"x1": fp.x1, "delta_L": fp.delta_L,
                              "gw1": fp.gw1},
-                            compressible=True)
+                            compressible=True, key=seg.node_id)
                     break
                 except VisitDropped:
                     wire = None

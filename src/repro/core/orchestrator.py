@@ -247,7 +247,7 @@ class TLOrchestrator:
                                                      jnp.float32),
                              "n_correct": jnp.asarray(fp.n_correct,
                                                       jnp.int32)},
-                            compressible=True)
+                            compressible=True, key=seg.node_id)
                 except VisitDropped:
                     attempt += 1
                     h = self._health.setdefault(seg.node_id, NodeHealth())

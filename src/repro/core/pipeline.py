@@ -75,7 +75,14 @@ class PipelinedEpochEngine:
     def _produce(self, vb: VirtualBatch, node_by_id, scope=None):
         """Collect batch ``vb``'s visit payloads.  Inside an overlap
         ``scope`` the work joins the "visits" lane; in strict mode only the
-        transfers overlap (compute ticks stay serial)."""
+        transfers overlap (compute ticks stay serial).
+
+        Wire compression rides along untouched: this routes through
+        ``orch._collect_visits`` which issues the per-segment ``send``
+        calls in the same Python order as the serial path, so an
+        error-feedback wire sees an identical residual sequence per
+        ``(node, tag)`` lane and the pipelined run stays bit-equal to the
+        serial one, compressed or not."""
         orch = self.orch
         if scope is None:
             results, order = orch._collect_visits(vb, node_by_id, issue=True)

@@ -116,7 +116,15 @@ def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
                        + spec.logits_bytes_per_sample)
     wire = samples * per_sample_wire + n_local_batches * spec.first_layer_param_bytes
     if compressed:
-        wire = wire / 4 + samples * 4                      # int8 + scales (§5.2)
+        # act_compress wire format (§5.2): 1 B/element + one 4 B f32 scale
+        # per row (``act_compress.compressed_bytes``).  The f32 element
+        # count is wire/4; rows are X^(1), ∂X^(1), δ^(L) — one per sample
+        # each — plus ∂W^(1)'s first_layer_param_bytes /
+        # first_layer_bytes_per_sample rows per local batch (D_in + 1 for
+        # a dense first layer: weight rows + the bias row)
+        rows = (3 * samples + n_local_batches * spec.first_layer_param_bytes
+                / spec.first_layer_bytes_per_sample)
+        wire = wire / 4 + 4 * rows
     total_wire = wire
     if not cache_model:
         total_wire += n_local_batches * spec.model_bytes   # redistribution

@@ -3,13 +3,30 @@
 Every orchestrator↔node exchange in the protocol simulator goes through a
 ``Transport``, which
   * counts payload bytes per direction and per message tag,
-  * optionally compresses eligible float tensors to int8 (paper §5.2,
-    ``repro.kernels.act_compress``),
+  * optionally compresses eligible float tensors per tag through a
+    :class:`WirePolicy` — {off, int8, fp8} × {error feedback on/off}
+    (paper §5.2, ``repro.kernels.act_compress``),
   * advances a virtual clock with a latency/bandwidth model so the paper's
     runtime equations (15–19) can be compared against 'measured' simulated
     time.  Parallel transfers (the paper's pipelined communication) are
     modeled with ``parallel``: transfers inside a window overlap and cost
     max() instead of sum().
+
+Wire compression (``WirePolicy``): each tag gets a :class:`LaneSpec`
+(codec ∈ {off, int8, fp8}, error-feedback flag).  A compressed send
+charges the *compressed* bytes (1 B/element + one 4 B f32 scale per row,
+``act_compress.compressed_bytes``) and appends a ``wire:{codec}``
+WindowRecord carrying ``meta={"raw_bytes", "ratio"}`` so ``window_log``
+measures the bandwidth win per send; ``raw_bytes`` keeps the per-tag
+uncompressed totals for the same comparison in aggregate.  Error feedback
+keeps one residual per ``(key, tag, leaf)`` lane: each send compresses
+``x + residual`` and stores the new quantization error, so a repeatedly
+sent signal is transmitted losslessly in the limit.  Model parameters are
+never quantized — a lossy codec on the "model" tag is a construction-time
+``ValueError``.  EF composes with fault lanes: a DROP lane suspends
+residual commits (the payload never arrived, so the lane's state must not
+advance), which makes the retried attempt byte-identical to the dropped
+one and the whole run bit-equal to its fault-free counterpart.
 
 Cross-batch pipelining (the double-buffered epoch engine) is modeled with
 ``overlap``: an overlap scope holds named *lanes* that run concurrently
@@ -59,6 +76,58 @@ class NetworkModel:
         return self.rtt_s + nbytes / self.bandwidth_bytes_per_s
 
 
+_WIRE_CODECS = ("off", "int8", "fp8")
+
+
+@dataclass(frozen=True)
+class LaneSpec:
+    """Wire treatment for one message tag: which quantization rung (if
+    any) and whether the lane runs an error-feedback accumulator."""
+    codec: str = "off"                  # "off" | "int8" | "fp8"
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.codec not in _WIRE_CODECS:
+            raise ValueError(f"unknown wire codec {self.codec!r}; "
+                             f"one of {_WIRE_CODECS}")
+        if self.error_feedback and self.codec == "off":
+            raise ValueError("error_feedback requires a lossy codec")
+
+
+@dataclass(frozen=True)
+class WirePolicy:
+    """Per-tag wire compression policy.  Tags without an entry ship raw.
+
+    The "model" tag may never carry a lossy codec: TL's losslessness
+    argument requires every node to train against *exactly* the
+    orchestrator's parameters, so quantizing the redistribution would
+    silently break the centralized-equivalence grid."""
+    lanes: Dict[str, LaneSpec] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for tag, spec in self.lanes.items():
+            if tag == "model" and spec.codec != "off":
+                raise ValueError(
+                    "model parameters must never quantize (lossy codec "
+                    f"{spec.codec!r} on tag 'model')")
+
+    def lane(self, tag: str) -> LaneSpec:
+        return self.lanes.get(tag, _LANE_OFF)
+
+    @classmethod
+    def visits(cls, codec: str, *, error_feedback: bool = False
+               ) -> Optional["WirePolicy"]:
+        """Policy compressing the visit payload tag ("activations_grads")
+        at ``codec``; ``codec="off"`` returns ``None`` (no policy)."""
+        if codec == "off":
+            return None
+        return cls({"activations_grads":
+                    LaneSpec(codec, error_feedback=error_feedback)})
+
+
+_LANE_OFF = LaneSpec()
+
+
 def _leaf_bytes(leaf) -> int:
     """Wire size of one pytree leaf: array leaves by their buffer size,
     python scalars as 8 bytes, anything else free (metadata)."""
@@ -92,12 +161,12 @@ class WindowRecord:
     their own record (a parallel window inside an overlap lane appears in
     both), so the log is hierarchical — don't sum ``nbytes`` across records
     expecting ``total_bytes``."""
-    kind: str                       # "parallel" | "overlap" | "fault:*"
+    kind: str               # "parallel" | "overlap" | "fault:*" | "wire:*"
     clock_s: float
     nbytes: int
     by_tag: Dict[str, int] = field(default_factory=dict)
     lanes: Dict[str, float] = field(default_factory=dict)   # overlap only
-    meta: Dict[str, float] = field(default_factory=dict)    # fault lanes only
+    meta: Dict[str, float] = field(default_factory=dict)    # fault/wire only
 
 
 class _OverlapScope:
@@ -139,8 +208,11 @@ class _OverlapScope:
 @dataclass
 class Transport:
     network: NetworkModel = field(default_factory=NetworkModel)
-    compress_activations: bool = False
+    wire: Optional[WirePolicy] = None
     bytes_sent: Dict[str, int] = field(default_factory=dict)
+    # per-tag *uncompressed* payload totals — always charged, wire on or
+    # off, so raw_bytes[tag] / bytes_sent[tag] is the measured bytes ratio
+    raw_bytes: Dict[str, int] = field(default_factory=dict)
     n_messages: int = 0
     clock_s: float = 0.0
     window_log: List[WindowRecord] = field(default_factory=list)
@@ -157,6 +229,11 @@ class Transport:
     # fault WindowRecord — copies; deposits still flow to window/lane/clock)
     _fault_factor: float = 1.0
     _fault_entries: Optional[List[Tuple[float, str, int]]] = None
+    # error-feedback residual store, keyed (key, tag, leaf_index); commits
+    # are suspended inside DROP fault lanes (payload never delivered)
+    _ef_residuals: Dict[Tuple, object] = field(default_factory=dict,
+                                               repr=False)
+    _ef_suspended: bool = False
 
     # ---- bookkeeping -----------------------------------------------------
     def _deposit(self, t: float, tag: str, nbytes: int):
@@ -282,14 +359,21 @@ class Transport:
             return
         prev_factor = self._fault_factor
         prev_entries = self._fault_entries
+        prev_suspended = self._ef_suspended
         self._fault_factor = prev_factor * outcome.factor
         entries: List[Tuple[float, str, int]] = []
         self._fault_entries = entries
+        if outcome.kind == DROP:
+            # the payload will be lost: the error-feedback lane must not
+            # advance, so the retry recompresses against the *same*
+            # residual and ships a byte-identical payload
+            self._ef_suspended = True
         try:
             yield outcome
         finally:
             self._fault_factor = prev_factor
             self._fault_entries = prev_entries
+            self._ef_suspended = prev_suspended
             t, by_tag = _fold_entries(entries)
             nbytes = sum(by_tag.values())
             self.window_log.append(WindowRecord(
@@ -305,27 +389,52 @@ class Transport:
         return sum(self.bytes_sent.values())
 
     # ---- sending ---------------------------------------------------------
-    def send(self, tag: str, payload, *, compressible: bool = False):
-        """Returns the payload as the receiver sees it (possibly after an
-        int8 round-trip when compression is on)."""
-        if compressible and self.compress_activations:
-            from repro.kernels.act_compress import (compress, compressed_bytes,
-                                                    decompress)
-            out = []
-            nbytes = 0
-            for leaf in jax.tree.leaves(payload):
-                # int8-compress float *tensors* only; scalars and non-float
-                # leaves are charged by their true wire size (not a silent
-                # 8-byte default for anything lacking .nbytes)
-                if hasattr(leaf, "dtype") and jnp.issubdtype(
-                        leaf.dtype, jnp.floating) and leaf.ndim >= 1:
-                    c = compress(leaf)
-                    nbytes += compressed_bytes(c)
-                    out.append(decompress(c, leaf.shape, out_dtype=leaf.dtype))
+    def send(self, tag: str, payload, *, compressible: bool = False,
+             key=None):
+        """Returns the payload as the receiver sees it (possibly after a
+        quantization round-trip when the tag's wire lane is on).
+
+        ``compressible`` marks the payload as quantization-*eligible*; the
+        active :class:`WirePolicy` decides whether/how the tag actually
+        compresses.  ``key`` identifies the sender's error-feedback lane
+        (typically the node id): residuals are kept per
+        ``(key, tag, leaf)``, and a residual whose shape no longer matches
+        its leaf (segment sizes vary per batch) resets to zero."""
+        raw = payload_bytes(payload)
+        self.raw_bytes[tag] = self.raw_bytes.get(tag, 0) + raw
+        spec = (self.wire.lane(tag)
+                if compressible and self.wire is not None else _LANE_OFF)
+        if spec.codec == "off":
+            self._account(tag, raw)
+            return payload
+        from repro.kernels.act_compress import (compress, compressed_bytes,
+                                                decompress, ef_compress)
+        out = []
+        nbytes = 0
+        for i, leaf in enumerate(jax.tree.leaves(payload)):
+            # quantize float *tensors* only; scalars and non-float leaves
+            # (loss sums, counts) are charged by their true wire size
+            if hasattr(leaf, "dtype") and jnp.issubdtype(
+                    leaf.dtype, jnp.floating) and leaf.ndim >= 1:
+                if spec.error_feedback:
+                    ef_key = (key, tag, i)
+                    residual = self._ef_residuals.get(ef_key)
+                    if residual is not None and residual.shape != leaf.shape:
+                        residual = None
+                    c, delivered, new_residual = ef_compress(
+                        leaf, residual, codec=spec.codec)
+                    if not self._ef_suspended:
+                        self._ef_residuals[ef_key] = new_residual
+                    out.append(delivered)
                 else:
-                    nbytes += _leaf_bytes(leaf)
-                    out.append(leaf)
-            self._account(tag, nbytes)
-            return jax.tree.unflatten(jax.tree.structure(payload), out)
-        self._account(tag, payload_bytes(payload))
-        return payload
+                    c = compress(leaf, codec=spec.codec)
+                    out.append(decompress(c, leaf.shape, out_dtype=leaf.dtype))
+                nbytes += compressed_bytes(c)
+            else:
+                nbytes += _leaf_bytes(leaf)
+                out.append(leaf)
+        self.window_log.append(WindowRecord(
+            f"wire:{spec.codec}", 0.0, nbytes, {tag: nbytes},
+            meta={"raw_bytes": raw, "ratio": raw / max(nbytes, 1)}))
+        self._account(tag, nbytes)
+        return jax.tree.unflatten(jax.tree.structure(payload), out)

@@ -1,5 +1,8 @@
-from repro.kernels.act_compress.ops import compress, compressed_bytes, decompress
-from repro.kernels.act_compress.ref import dequantize_rows_ref, quantize_rows_ref
+from repro.kernels.act_compress.kernel import CODECS
+from repro.kernels.act_compress.ops import (compress, compressed_bytes,
+                                            decompress, ef_compress)
+from repro.kernels.act_compress.ref import (dequantize_rows_ref,
+                                            quantize_rows_ref)
 
-__all__ = ["compress", "decompress", "compressed_bytes",
-           "quantize_rows_ref", "dequantize_rows_ref"]
+__all__ = ["CODECS", "compress", "decompress", "compressed_bytes",
+           "ef_compress", "quantize_rows_ref", "dequantize_rows_ref"]

@@ -1,13 +1,29 @@
-"""Activation int8 compression Pallas TPU kernels (paper §5.2).
+"""Activation compression Pallas TPU kernels (paper §5.2).
 
 TL's wire traffic is first-layer activations + first/last-layer gradients;
 the paper proposes compressing them.  These kernels perform per-row absmax
-int8 quantization (and dequantization) so a (tokens, d_model) activation
-block ships over ICI/DCN at ~4× fewer bytes + one f32 scale per row.
+quantization (and dequantization) at two rungs — int8 and fp8 (e4m3) — so
+a (tokens, d_model) activation block ships over ICI/DCN at ~4× fewer bytes
+plus one f32 scale per row.
 
-Grid: row blocks.  BlockSpec tile (BR, D) f32 in, (BR, D) int8 + (BR,) f32
-out — e.g. BR=256, D=8192 → 8 MB in-tile, within VMEM for one buffer; use
-BR=128 for d_model=8192 models to leave double-buffer headroom.
+Quantizer formulation (shared by both rungs, and load-bearing for the
+error-feedback lane in ``repro.core.transport``):
+
+    scale = max(absmax(row), eps)
+    q     = round(x / scale * DENOM)        # int8: clip to ±127; fp8: cast
+    x'    = q / DENOM * scale
+
+i.e. the *scale is the raw absmax* and DENOM (127 / 256) divides at
+dequant time.  A spatially-constant row then round-trips **bit-exactly**:
+``x/scale = ±1.0`` and ``q/DENOM = ±1.0`` are exact float ops, so
+``x' == x`` and the error-feedback residual of a constant tensor is
+*exactly zero* — the lossless-in-the-limit property the transport's EF
+accumulator tests pin.  (The historical ``scale = absmax/127`` form fails
+this: ``fl(127 · fl(c/127)) != c`` in general.)
+
+Grid: row blocks.  BlockSpec tile (BR, D) f32 in, (BR, D) int8|fp8 +
+(BR,) f32 out — e.g. BR=256, D=8192 → 8 MB in-tile, within VMEM for one
+buffer; use BR=128 for d_model=8192 models to leave double-buffer headroom.
 """
 from __future__ import annotations
 
@@ -16,30 +32,82 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# codec -> (wire dtype, dequant denominator).  Exactness at the rails
+# (q = ±DENOM → ±1.0) is enforced by ``_pin_rails`` in the dequant — XLA
+# may rewrite division by a constant into multiplication by its rounded
+# reciprocal or reassociate ``q/DENOM*scale``, either of which is an ulp
+# off at the rails.  fp8 uses e4m3fn with a power-of-two denominator on
+# top of that: 256 <= 448 (e4m3 max normal) so there is no overflow,
+# ±256 is exactly representable, q/256 is exact under *any* rewrite, and
+# e4m3's ~2^-4 relative precision is unchanged by which slice of the
+# exponent range we use.  int8 keeps the conventional 127 (the
+# absmax/127 error bound is pinned by tests).
+CODECS = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 256.0),
+}
 
-def _quant_kernel(x_ref, q_ref, s_ref):
-    x = x_ref[...].astype(jnp.float32)
-    absmax = jnp.max(jnp.abs(x), axis=-1)
-    scale = jnp.maximum(absmax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
-    q_ref[...] = q.astype(jnp.int8)
-    s_ref[...] = scale
+
+def _check_codec(codec: str):
+    if codec not in CODECS:
+        raise ValueError(f"unknown wire codec {codec!r}; "
+                         f"one of {sorted(CODECS)}")
+    return CODECS[codec]
 
 
-def _dequant_kernel(q_ref, s_ref, x_ref):
-    x_ref[...] = (q_ref[...].astype(jnp.float32)
-                  * s_ref[...][:, None]).astype(x_ref.dtype)
+def _pin_rails(qf, u, denom):
+    """Force the rail levels ``q == ±DENOM`` to dequantize to exactly
+    ``±1.0``.  XLA is free to rewrite ``q / DENOM * scale`` into
+    ``q · fl(1/DENOM) · scale`` or ``q · (scale/DENOM)``, either of which
+    is off by an ulp at the rails — and the rails are exactly where the
+    error-feedback exactness argument lives (a constant row quantizes to
+    all-rails and must round-trip bit-equal, so its residual is exactly
+    zero).  Interior levels only need the bounded-error property, which
+    any rewrite preserves."""
+    return jnp.where(jnp.abs(qf) == denom, jnp.sign(qf), u)
 
 
-def quantize_rows(x, *, block_rows: int = 128, interpret=None):
-    """x: (R, D) -> (int8 (R, D), scales f32 (R,)). R % block_rows == 0."""
+def _make_quant_kernel(codec: str):
+    qdtype, denom = _check_codec(codec)
+
+    def _quant_kernel(x_ref, q_ref, s_ref):
+        x = x_ref[...].astype(jnp.float32)
+        absmax = jnp.max(jnp.abs(x), axis=-1)
+        scale = jnp.maximum(absmax, 1e-12)
+        u = x / scale[:, None] * denom
+        if codec == "int8":
+            q = jnp.clip(jnp.round(u), -127, 127).astype(qdtype)
+        else:
+            # e4m3 cast rounds to nearest; |u| <= 256 < 448 max normal
+            q = u.astype(qdtype)
+        q_ref[...] = q
+        s_ref[...] = scale
+
+    return _quant_kernel
+
+
+def _make_dequant_kernel(codec: str):
+    _, denom = _check_codec(codec)
+
+    def _dequant_kernel(q_ref, s_ref, x_ref):
+        qf = q_ref[...].astype(jnp.float32)
+        u = _pin_rails(qf, qf / denom, denom)
+        x_ref[...] = (u * s_ref[...][:, None]).astype(x_ref.dtype)
+
+    return _dequant_kernel
+
+
+def quantize_rows(x, *, codec: str = "int8", block_rows: int = 128,
+                  interpret=None):
+    """x: (R, D) -> (int8|fp8 (R, D), scales f32 (R,)). R % block_rows == 0."""
     from repro.kernels import resolve_interpret
     interpret = resolve_interpret(interpret)
+    qdtype, _ = _check_codec(codec)
     R, D = x.shape
     assert R % block_rows == 0
     grid = (R // block_rows,)
     return pl.pallas_call(
-        _quant_kernel,
+        _make_quant_kernel(codec),
         grid=grid,
         in_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0))],
         out_specs=[
@@ -47,23 +115,24 @@ def quantize_rows(x, *, block_rows: int = 128, interpret=None):
             pl.BlockSpec((block_rows,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((R, D), jnp.int8),
+            jax.ShapeDtypeStruct((R, D), qdtype),
             jax.ShapeDtypeStruct((R,), jnp.float32),
         ],
         interpret=interpret,
     )(x)
 
 
-def dequantize_rows(q, scales, *, out_dtype=jnp.float32,
+def dequantize_rows(q, scales, *, codec: str = "int8", out_dtype=jnp.float32,
                     block_rows: int = 128, interpret=None):
-    """Inverse of :func:`quantize_rows`."""
+    """Inverse of :func:`quantize_rows` (same ``codec``)."""
     from repro.kernels import resolve_interpret
     interpret = resolve_interpret(interpret)
+    _check_codec(codec)
     R, D = q.shape
     assert R % block_rows == 0
     grid = (R // block_rows,)
     return pl.pallas_call(
-        _dequant_kernel,
+        _make_dequant_kernel(codec),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, D), lambda i: (i, 0)),

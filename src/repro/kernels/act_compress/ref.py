@@ -1,14 +1,29 @@
-"""Pure-jnp oracle for the int8 row quantizer."""
+"""Pure-jnp oracles for the int8/fp8 row quantizers.
+
+Same formulation as the Pallas kernels (``scale = absmax``, DENOM divides
+at dequant time) — see ``kernel.py`` for why that form, not
+``scale = absmax/DENOM``, is load-bearing for the error-feedback lane.
+"""
 import jax.numpy as jnp
 
+from repro.kernels.act_compress.kernel import CODECS, _pin_rails
 
-def quantize_rows_ref(x):
+
+def quantize_rows_ref(x, codec: str = "int8"):
+    qdtype, denom = CODECS[codec]
     x = x.astype(jnp.float32)
     absmax = jnp.max(jnp.abs(x), axis=-1)
-    scale = jnp.maximum(absmax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    scale = jnp.maximum(absmax, 1e-12)
+    u = x / scale[:, None] * denom
+    if codec == "int8":
+        q = jnp.clip(jnp.round(u), -127, 127).astype(qdtype)
+    else:
+        q = u.astype(qdtype)
     return q, scale
 
 
-def dequantize_rows_ref(q, scale, out_dtype=jnp.float32):
-    return (q.astype(jnp.float32) * scale[:, None]).astype(out_dtype)
+def dequantize_rows_ref(q, scale, out_dtype=jnp.float32, codec: str = "int8"):
+    _, denom = CODECS[codec]
+    qf = q.astype(jnp.float32)
+    u = _pin_rails(qf, qf / denom, denom)
+    return (u * scale[:, None]).astype(out_dtype)

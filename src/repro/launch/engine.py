@@ -131,7 +131,10 @@ class Engine:
     Sim-mode knobs (forwarded to ``TLOrchestrator``): ``batch_size``,
     ``transport``, ``fused``, ``cache_model_per_epoch``, ``seed``; the
     shared ``pipeline`` flag selects the double-buffered epoch engine and
-    ``reassembly`` the orchestrator's scatter strategy.
+    ``reassembly`` the orchestrator's scatter strategy.  ``wire``
+    ("off" | "int8" | "fp8") + ``wire_ef`` build a visit-payload
+    :class:`~repro.core.transport.WirePolicy` transport (sim-only; model
+    parameters never quantize; mutually exclusive with ``transport``).
     """
 
     PREFETCH_DEPTH = 2          # double buffer: consumed batch + in-flight
@@ -146,11 +149,19 @@ class Engine:
                  ckpt_keep: int = 0, elastic: bool = False,
                  device_faults=None, watchdog_s: float = 60.0,
                  batch_size: int = 64, transport=None, fused: bool = True,
-                 cache_model_per_epoch: bool = False, seed: int = 0):
+                 cache_model_per_epoch: bool = False, seed: int = 0,
+                 wire: str = "off", wire_ef: bool = False):
         if mode not in ("production", "sim"):
             raise ValueError(f"unknown engine mode: {mode!r}")
         if mode == "production" and (mesh is None or shape is None):
             raise ValueError("production mode needs a mesh and an InputShape")
+        if wire != "off" and mode != "sim":
+            raise ValueError(
+                "wire compression is simulator-only for now: the production "
+                "pjit path has no Transport to carry the WirePolicy")
+        if wire != "off" and transport is not None:
+            raise ValueError("pass either wire=... or a pre-built transport, "
+                             "not both")
         if reassembly not in ("none", "xla", "pallas"):
             raise ValueError(f"unknown reassembly strategy: {reassembly!r}")
         if elastic and mode != "production":
@@ -216,6 +227,12 @@ class Engine:
         self._sim_resume = None
         # sim-mode state
         self.batch_size = batch_size
+        if wire != "off":
+            from repro.core.transport import Transport, WirePolicy
+            transport = Transport(
+                wire=WirePolicy.visits(wire, error_feedback=wire_ef))
+        self.wire = wire
+        self.wire_ef = wire_ef
         self.transport = transport
         self.fused = fused
         self.cache_model_per_epoch = cache_model_per_epoch

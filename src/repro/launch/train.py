@@ -37,6 +37,13 @@ checkpoint on the shrunken mesh and asserts the final parameters are
 bit-equal, printing ``RECOVERY_DRILL bit_equal=true`` (the CI
 ``recovery-drill`` job greps exactly this).  A drill without ``--elastic``
 fails loudly with the ``DeviceLost`` diagnostic — never a silent hang.
+
+Compressed traversal wire: ``--mode sim --wire {int8,fp8} [--wire-ef]``
+runs the protocol simulator with the visit-payload lane quantized
+(per-row absmax, ``repro.kernels.act_compress``) and prints the measured
+per-tag raw-vs-wire byte ratio from the transport; ``--wire-ef`` adds the
+error-feedback accumulator (lossless-in-the-limit).  Model parameters
+never quantize in any configuration.
 """
 from __future__ import annotations
 
@@ -54,6 +61,38 @@ from repro.launch.engine import Engine
 from repro.launch.mesh import resolve_mesh
 from repro.models import build_model
 from repro.optim import adamw, warmup_cosine
+
+
+def _run_sim(args):
+    """Protocol-simulator run (``--mode sim``): DATRET on the
+    TLOrchestrator via the Engine facade, with the wire-compression lane
+    live — prints the per-tag raw-vs-wire byte accounting from the
+    transport so ``--wire int8 --wire-ef`` shows the measured bandwidth
+    win (model parameters always ship exact)."""
+    from repro.configs.paper_models import DATRET
+    from repro.core.baselines import ShardData
+    from repro.models.small import SmallModel
+    from repro.optim import sgd
+
+    r = np.random.default_rng(5)
+    shards = [ShardData(
+        r.normal(size=(64,) + DATRET.in_shape).astype(np.float32),
+        r.integers(0, DATRET.n_classes, 64)) for _ in range(args.nodes)]
+    engine = Engine(SmallModel(DATRET), DATRET, sgd(0.05), mode="sim",
+                    pipeline=args.pipeline, batch_size=32, seed=0,
+                    wire=args.wire, wire_ef=args.wire_ef)
+    result = engine.run(shards, epochs=args.epochs)
+    tr = engine.orchestrator.transport
+    print(f"mode=sim arch=datret nodes={args.nodes} epochs={args.epochs} "
+          f"wire={args.wire} ef={args.wire_ef}")
+    for tag in sorted(tr.bytes_sent):
+        raw, wire = tr.raw_bytes.get(tag, 0), tr.bytes_sent[tag]
+        print(f"wire[{tag}]: raw={raw} wire={wire} "
+              f"ratio={raw / max(wire, 1):.2f}x")
+    losses = result.losses.tolist()
+    print(f"final loss {np.mean(losses[-5:]):.4f} "
+          f"(start {np.mean(losses[:5]):.4f})")
+    return losses
 
 
 def main(argv=None):
@@ -112,7 +151,30 @@ def main(argv=None):
                          "schedule and checkpoints stay those of the full "
                          "budget, exactly like a real mid-run kill)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--mode", default="production",
+                    choices=["production", "sim"],
+                    help="production: pjit engine on a device mesh; sim: "
+                         "the protocol simulator (TLOrchestrator), where "
+                         "the wire-compression lane is live")
+    ap.add_argument("--epochs", type=int, default=3,
+                    help="sim mode: orchestrator epochs")
+    ap.add_argument("--wire", default="off", choices=["off", "int8", "fp8"],
+                    help="visit-payload wire codec in the sim transport "
+                         "(X^(1)/δ^(L)/∂X^(1)/∂W^(1) quantize per-row; "
+                         "model parameters never do)")
+    ap.add_argument("--wire-ef", action="store_true",
+                    help="error-feedback accumulator on the wire lane: "
+                         "each send compresses x + residual and carries "
+                         "the quantization error forward "
+                         "(lossless-in-the-limit)")
     args = ap.parse_args(argv)
+    if args.wire != "off" and args.mode != "sim":
+        ap.error("--wire is simulator-only for now: pass --mode sim (the "
+                 "production pjit path has no Transport wire)")
+    if args.wire_ef and args.wire == "off":
+        ap.error("--wire-ef needs --wire {int8,fp8}")
+    if args.mode == "sim":
+        return _run_sim(args)
     if args.resume and not args.ckpt:
         ap.error("--resume needs --ckpt")
     if args.ckpt_every and not args.ckpt:

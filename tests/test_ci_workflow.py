@@ -67,6 +67,9 @@ def test_kernel_leg_sets_interpret_mode_explicitly(wf):
     kernel_run = by_tier["kernels-interpret"]["run"]
     assert kernel_run.startswith("REPRO_PALLAS_INTERPRET=1 ")
     assert "tests/test_kernels.py" in kernel_run
+    # the compressed-traversal-wire acceptance grid rides the same leg:
+    # it drives the quantizer kernels end to end through the transport
+    assert "tests/test_wire_compression.py" in kernel_run
 
 
 def test_test_jobs_pin_cpu_backend_and_jax_wheel(wf):

@@ -11,9 +11,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.act_compress import (compress, decompress,
-                                        dequantize_rows_ref,
-                                        quantize_rows_ref)
+from repro.kernels.act_compress import (CODECS, compress, compressed_bytes,
+                                        decompress, dequantize_rows_ref,
+                                        ef_compress, quantize_rows_ref)
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.rglru import rglru_ref, rglru_scan
 from repro.kernels.ssd import ssd, ssd_ref_bh
@@ -111,6 +111,85 @@ def test_quantizer_matches_ref_bitexact():
     xr = decompress(payload, x.shape, block_rows=32)
     ref = dequantize_rows_ref(qr, sr)
     np.testing.assert_allclose(np.asarray(xr), np.asarray(ref), atol=1e-6)
+
+
+def test_fp8_quantizer_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(4), (96, 192)) * 5
+    payload = compress(x, codec="fp8", block_rows=32)
+    assert payload["q"].dtype == jnp.float8_e4m3fn
+    qr, sr = quantize_rows_ref(x, codec="fp8")
+    np.testing.assert_allclose(np.asarray(payload["scale"]), np.asarray(sr),
+                               rtol=1e-6)
+    xr = decompress(payload, x.shape, block_rows=32)
+    ref = dequantize_rows_ref(qr, sr, codec="fp8")
+    # a 1-ulp scale difference moves a dequantized element by at most one
+    # e4m3 quantization level of its row
+    tol = np.abs(np.asarray(x)).max(axis=1, keepdims=True) / 16.0
+    assert np.all(np.abs(np.asarray(xr) - np.asarray(ref)) <= tol + 1e-6)
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_quantizer_wire_bytes(codec):
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, 128))
+    payload = compress(x, codec=codec, block_rows=32)
+    # 1 B/element (both rungs are single-byte dtypes) + 4 B f32 scale/row
+    assert compressed_bytes(payload) == 64 * 128 + 64 * 4
+
+
+def test_compress_rejects_non_float():
+    with pytest.raises(TypeError, match="floating-point"):
+        compress(jnp.arange(32).reshape(4, 8))
+    with pytest.raises(TypeError, match="floating-point"):
+        compress(np.zeros((4, 8), bool))
+
+
+def test_bf16_roundtrip_regression():
+    """bf16 in / bf16 out through the int8 wire: dtype is preserved and the
+    error stays within the int8 grid bound (+ bf16's own half-ulp)."""
+    x = (jax.random.normal(jax.random.PRNGKey(6), (32, 64)) * 3
+         ).astype(jnp.bfloat16)
+    payload = compress(x, block_rows=32)
+    xr = decompress(payload, x.shape, out_dtype=jnp.bfloat16, block_rows=32)
+    assert xr.dtype == jnp.bfloat16
+    xf = np.asarray(x, np.float32)
+    bound = np.abs(xf).max(axis=1, keepdims=True) * (0.5 / 127 + 2.0 ** -8)
+    assert np.all(np.abs(np.asarray(xr, np.float32) - xf) <= bound + 1e-6)
+
+
+@given(codec=st.sampled_from(sorted(CODECS)),
+       value=st.floats(-1e3, 1e3, allow_nan=False, width=32),
+       rows=st.integers(1, 5), cols=st.integers(1, 16), sends=st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_ef_residual_of_constant_contracts_to_exact_zero(codec, value, rows,
+                                                         cols, sends):
+    """Lossless-in-the-limit, sharpest case: a constant tensor's
+    error-feedback residual is *exactly* zero from the first send on (the
+    scale = absmax formulation makes x/scale = ±1 and q/DENOM = ±1 exact),
+    so the delivered tensor is bit-equal to the input every time."""
+    x = jnp.full((rows, cols), np.float32(value))
+    residual = None
+    for _ in range(sends):
+        _, delivered, residual = ef_compress(x, residual, codec=codec,
+                                             block_rows=1)
+        np.testing.assert_array_equal(np.asarray(delivered), np.asarray(x))
+        assert np.all(np.asarray(residual) == 0.0)
+
+
+@pytest.mark.parametrize("codec", sorted(CODECS))
+def test_ef_residual_drives_mean_delivered_to_x(codec):
+    """Lossless-in-the-limit on *random* data: with error feedback, the
+    running mean of delivered tensors converges to x (quantization error is
+    carried forward, not discarded), far below the one-shot error bound."""
+    x = jnp.asarray(np.random.default_rng(7).normal(size=(16, 32)) * 5,
+                    jnp.float32)
+    residual, acc = None, np.zeros(x.shape, np.float32)
+    for k in range(1, 65):
+        _, delivered, residual = ef_compress(x, residual, codec=codec,
+                                             block_rows=16)
+        acc += np.asarray(delivered)
+    one_shot = np.abs(np.asarray(x)).max() / (127 if codec == "int8" else 16)
+    err = np.abs(acc / 64 - np.asarray(x)).max()
+    assert err < one_shot / 8
 
 
 # ---------------------------------------------------------------- vb_scatter
@@ -217,16 +296,25 @@ def test_permute_rows_column_blocking(mode):
     np.testing.assert_array_equal(np.asarray(got_n), np.asarray(want_n))
 
 
-@given(rows=st.integers(1, 40), cols=st.integers(2, 64),
-       scale=st.floats(1e-3, 1e3))
+@given(codec=st.sampled_from(sorted(CODECS)),
+       rows=st.integers(1, 40), cols=st.integers(2, 64),
+       scale=st.floats(1e-3, 1e3), zero_row=st.booleans())
 @settings(max_examples=25, deadline=None)
-def test_quantizer_error_bound(rows, cols, scale):
-    """Property: |x - dequant(quant(x))| <= absmax/127 per row (half-ulp of
-    the int8 grid) — the §5.2 compression is lossy but bounded."""
+def test_quantizer_error_bound(codec, rows, cols, scale, zero_row):
+    """Property: per-row |x - dequant(quant(x))| <= absmax/127 for int8
+    (half-ulp of the int8 grid), resp. absmax/16 for fp8 (e4m3 half-ulp is
+    2^-4 relative) — the §5.2 compression is lossy but bounded.  Covers
+    single-row payloads (rows=1) and all-zero rows, which must round-trip
+    to exactly zero."""
     x = np.random.default_rng(rows * 100 + cols).normal(
         size=(rows, cols)).astype(np.float32) * scale
-    q, s = quantize_rows_ref(jnp.asarray(x))
-    xr = dequantize_rows_ref(q, s)
-    bound = np.abs(x).max(axis=1) / 127.0 * 0.5 + 1e-7
-    err = np.abs(np.asarray(xr) - x).max(axis=1)
+    if zero_row:
+        x[rows // 2] = 0.0
+    q, s = quantize_rows_ref(jnp.asarray(x), codec=codec)
+    xr = np.asarray(dequantize_rows_ref(q, s, codec=codec))
+    half_ulp = 0.5 / 127.0 if codec == "int8" else 1.0 / 16.0
+    bound = np.abs(x).max(axis=1) * half_ulp + 1e-7
+    err = np.abs(xr - x).max(axis=1)
     assert np.all(err <= bound * 1.01)
+    if zero_row:
+        assert np.all(xr[rows // 2] == 0.0)

@@ -7,7 +7,8 @@ import pytest
 from repro.core.faults import FaultInjector, FaultSpec, VisitDropped
 from repro.core.runtime_model import (WorkloadSpec, runtime_fl, runtime_sfl,
                                       runtime_sl, runtime_slp, runtime_tl)
-from repro.core.transport import NetworkModel, Transport, payload_bytes
+from repro.core.transport import (LaneSpec, NetworkModel, Transport,
+                                  WirePolicy, payload_bytes)
 
 
 def test_payload_bytes():
@@ -191,14 +192,34 @@ def test_fault_lane_passthrough_without_injector():
 
 def test_compression_reduces_bytes():
     tr_plain = Transport()
-    tr_comp = Transport(compress_activations=True)
+    tr_comp = Transport(wire=WirePolicy({"t": LaneSpec("int8")}))
     x = {"acts": jnp.ones((256, 64), jnp.float32)}
     tr_plain.send("t", x, compressible=True)
     got = tr_comp.send("t", x, compressible=True)
     assert tr_comp.bytes_sent["t"] < tr_plain.bytes_sent["t"] / 3
+    # raw_bytes keeps the uncompressed total on both transports
+    assert tr_comp.raw_bytes["t"] == tr_plain.bytes_sent["t"]
+    # each compressed send logs a wire:* record with the raw/wire ratio
+    (rec,) = [r for r in tr_comp.window_log if r.kind == "wire:int8"]
+    assert rec.nbytes == tr_comp.bytes_sent["t"]
+    assert rec.meta["raw_bytes"] == tr_comp.raw_bytes["t"]
+    assert rec.meta["ratio"] > 3
     # §5.2: lossy but close
     np.testing.assert_allclose(np.asarray(got["acts"]), np.ones((256, 64)),
                                atol=0.02)
+
+
+def test_wire_policy_rejects_lossy_model_lane():
+    with pytest.raises(ValueError, match="never quantize"):
+        WirePolicy({"model": LaneSpec("int8")})
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        LaneSpec("int4")
+    with pytest.raises(ValueError, match="requires a lossy codec"):
+        LaneSpec("off", error_feedback=True)
+    assert WirePolicy.visits("off") is None
+    pol = WirePolicy.visits("fp8", error_feedback=True)
+    assert pol.lane("activations_grads").codec == "fp8"
+    assert pol.lane("model").codec == "off"
 
 
 @pytest.fixture

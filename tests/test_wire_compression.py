@@ -1,0 +1,256 @@
+"""Compressed traversal wire: acceptance grid for the WirePolicy lanes.
+
+The tentpole claims, each pinned here against the real protocol paths:
+
+* **Bandwidth**: int8 on the visit-payload tag cuts X^(1)/δ^(L)/∂X^(1)/
+  ∂W^(1) wire bytes ≥3.5× at an unchanged visit plan, with model-parameter
+  bytes unchanged — measured from ``Transport.raw_bytes`` / ``bytes_sent``
+  and the per-send ``wire:*`` WindowRecords, not estimated.
+* **Wire off is free**: a policy that doesn't cover the visit tag leaves
+  the run bit-equal to a policy-less transport (the lossless grid in
+  ``test_tl_lossless.py`` is untouched).
+* **Lossless in the limit**: error-feedback training on the
+  {fused, eager} × {2, 3 uneven nodes} grid converges to within tolerance
+  of the uncompressed run over multiple epochs.
+* **Faults compose**: a dropped-then-retried attempt charges exactly the
+  compressed payload bytes in ``fault_log``, and the EF residual is
+  suspended across the drop so the retry ships a byte-identical payload —
+  the faulty run ends bit-equal to the fault-free compressed run.
+* **Eq. 19 alignment**: ``runtime_model.runtime_tl(compressed=...)``
+  predicts the transport's measured bytes/clock exactly (modulo the
+  8 B/batch protocol scalars the analytic model doesn't carry).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import DATRET
+from repro.core.faults import FaultInjector, FaultSpec, RecoveryPolicy
+from repro.core.node import TLNode
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.runtime_model import WorkloadSpec, runtime_tl
+from repro.core.transport import (LaneSpec, NetworkModel, Transport,
+                                  WirePolicy, payload_bytes)
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+INT8 = WirePolicy.visits("int8")
+INT8_EF = WirePolicy.visits("int8", error_feedback=True)
+FP8_EF = WirePolicy.visits("fp8", error_feedback=True)
+
+
+def _build(sizes, *, wire=None, fused=True, fault=None, pipelined=False,
+           batch=16, seed=7, network=None, cache_model=False):
+    model = SmallModel(DATRET)
+    r = np.random.default_rng(seed)
+    data = [(r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+             r.integers(0, DATRET.n_classes, n)) for n in sizes]
+    nodes = [TLNode(i, model, x, y, jit_visits=fused)
+             for i, (x, y) in enumerate(data)]
+    tr = Transport(network=network or NetworkModel(), wire=wire,
+                   faults=FaultInjector(fault) if fault else None)
+    orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=batch,
+                          seed=0, fused=fused, pipelined=pipelined,
+                          recovery=RecoveryPolicy(backoff_s=0.0),
+                          cache_model_per_epoch=cache_model)
+    orch.initialize(jax.random.PRNGKey(3))
+    return orch
+
+
+def _assert_bitequal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------- bandwidth win
+
+def test_int8_wire_cuts_visit_bytes_3_5x_with_model_bytes_unchanged():
+    off = _build([32, 32])
+    comp = _build([32, 32], wire=INT8)
+    off.train_epoch()
+    comp.train_epoch()
+    tag = "activations_grads"
+    # unchanged visit plan: the compressed run pushed the same raw payloads
+    # (shapes are plan-determined, not value-determined)
+    assert comp.transport.raw_bytes[tag] == off.transport.bytes_sent[tag]
+    ratio = comp.transport.raw_bytes[tag] / comp.transport.bytes_sent[tag]
+    assert ratio >= 3.5
+    # model redistribution ships exact, byte-for-byte as before
+    assert (comp.transport.bytes_sent["model"]
+            == off.transport.bytes_sent["model"]
+            == comp.transport.raw_bytes["model"])
+    # the win is measured per send in window_log, and the records sum back
+    # to the tag counters exactly
+    recs = [r for r in comp.transport.window_log if r.kind == "wire:int8"]
+    assert recs and all(r.meta["ratio"] >= 3.5 for r in recs)
+    assert sum(r.nbytes for r in recs) == comp.transport.bytes_sent[tag]
+    assert (sum(r.meta["raw_bytes"] for r in recs)
+            == comp.transport.raw_bytes[tag])
+    assert not [r for r in off.transport.window_log
+                if r.kind.startswith("wire:")]
+
+
+def test_wire_off_keeps_the_run_bit_equal():
+    """A policy that doesn't cover the visit tag is indistinguishable from
+    no policy: same bytes, same clock, bit-equal parameters — the lossless
+    acceptance grid needs no wire-off re-run."""
+    plain = _build([24, 16])
+    offpol = _build([24, 16],
+                    wire=WirePolicy({"unused_tag": LaneSpec("int8")}))
+    s1 = [s for _ in range(2) for s in plain.train_epoch()]
+    s2 = [s for _ in range(2) for s in offpol.train_epoch()]
+    _assert_bitequal(plain.params, offpol.params)
+    np.testing.assert_array_equal([s.loss for s in s1], [s.loss for s in s2])
+    assert plain.transport.bytes_sent == offpol.transport.bytes_sent
+    assert plain.transport.clock_s == offpol.transport.clock_s
+
+
+# ------------------------------------------------------------ EF convergence
+
+@pytest.mark.parametrize("sizes", [[32, 32], [40, 24, 16]],
+                         ids=["2nodes", "3nodes-uneven"])
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "eager"])
+def test_ef_training_converges_with_uncompressed(sizes, fused):
+    """EF-compressed training tracks the uncompressed run over multiple
+    epochs: the loss comes down and ends within tolerance of the exact
+    run's final loss — biased-lossy would drift, error feedback must not."""
+    base = _build(sizes, fused=fused)
+    ef = _build(sizes, fused=fused, wire=INT8_EF)
+    base_stats = [s for _ in range(4) for s in base.train_epoch()]
+    ef_stats = [s for _ in range(4) for s in ef.train_epoch()]
+    b0 = np.mean([s.loss for s in base_stats[:3]])
+    b1 = np.mean([s.loss for s in base_stats[-3:]])
+    e1 = np.mean([s.loss for s in ef_stats[-3:]])
+    assert b1 < b0, "uncompressed baseline failed to train"
+    assert abs(e1 - b1) < 0.05 * max(b1, 1e-3) + 5e-3
+
+
+def test_fp8_ef_training_converges():
+    base = _build([32, 32])
+    ef = _build([32, 32], wire=FP8_EF)
+    base_stats = [s for _ in range(4) for s in base.train_epoch()]
+    ef_stats = [s for _ in range(4) for s in ef.train_epoch()]
+    b1 = np.mean([s.loss for s in base_stats[-3:]])
+    e1 = np.mean([s.loss for s in ef_stats[-3:]])
+    assert abs(e1 - b1) < 0.10 * max(b1, 1e-3) + 1e-2
+
+
+def test_pipelined_equals_serial_under_ef_compression():
+    """The pipelined producer routes through the same ``_collect_visits``
+    in the same Python order, so the EF residual sequence — and therefore
+    every parameter bit — matches the serial run."""
+    serial = _build([24, 16], wire=INT8_EF, pipelined=False)
+    piped = _build([24, 16], wire=INT8_EF, pipelined=True)
+    s1 = [s for _ in range(2) for s in serial.train_epoch()]
+    s2 = [s for _ in range(2) for s in piped.train_epoch()]
+    _assert_bitequal(serial.params, piped.params)
+    np.testing.assert_array_equal([s.loss for s in s1], [s.loss for s in s2])
+
+
+# ------------------------------------------------------- faults × compression
+
+def test_drop_charges_exactly_the_compressed_attempt_bytes():
+    """Transport-level drill: every dropped attempt charges exactly one
+    compressed payload (q + scales, not the raw f32 bytes) to fault_log,
+    and the EF residual is suspended across drops — the delivered payload
+    and the post-send residual are bit-equal to a fault-free transport's."""
+    x = {"acts": jax.random.normal(jax.random.PRNGKey(9), (64, 128))}
+    pol = WirePolicy({"t": LaneSpec("int8", error_feedback=True)})
+    clean = Transport(wire=pol)
+    want = clean.send("t", x, compressible=True, key=0)
+
+    from repro.core.faults import VisitDropped
+    tr = Transport(wire=pol,
+                   faults=FaultInjector(FaultSpec(drop_prob=0.6, seed=5)))
+    attempts = 0
+    while True:
+        try:
+            with tr.fault_lane((0, 0, 0, attempts)):
+                got = tr.send("t", x, compressible=True, key=0)
+            break
+        except VisitDropped:
+            attempts += 1
+    assert attempts >= 1
+    one = clean.bytes_sent["t"]
+    assert one < payload_bytes(x) / 3.5
+    # every attempt (dropped or delivered) charged exactly one compressed
+    # payload; fault_log carries the compressed size, not the raw size
+    assert tr.bytes_sent["t"] == (attempts + 1) * one
+    assert all(ev.nbytes == one for ev in tr.fault_log)
+    assert tr.raw_bytes["t"] == (attempts + 1) * payload_bytes(x)
+    # EF suspension: the delivered payload and the residual state match the
+    # fault-free transport bit-for-bit
+    _assert_bitequal(got, want)
+    _assert_bitequal(tr._ef_residuals[(0, "t", 0)],
+                     clean._ef_residuals[(0, "t", 0)])
+    # and the *next* send (residual now live) still matches
+    _assert_bitequal(tr.send("t", x, compressible=True, key=0),
+                     clean.send("t", x, compressible=True, key=0))
+
+
+def test_faulty_ef_run_is_bit_equal_to_fault_free_compressed_run():
+    """End-to-end drill: drops + retries under int8+EF leave parameters
+    bit-equal to the fault-free compressed run, and total visit bytes equal
+    the fault-free bytes plus exactly the dropped attempts' compressed
+    bytes (the fault-accounting invariant, now under compression)."""
+    clean = _build([20, 12], wire=INT8_EF)
+    faulty = _build([20, 12], wire=INT8_EF,
+                    fault=FaultSpec(drop_prob=0.4, seed=11))
+    s1 = [s for _ in range(2) for s in clean.train_epoch()]
+    s2 = [s for _ in range(2) for s in faulty.train_epoch()]
+    _assert_bitequal(clean.params, faulty.params)
+    np.testing.assert_array_equal([s.loss for s in s1], [s.loss for s in s2])
+    tag = "activations_grads"
+    drops = [r for r in faulty.transport.window_log if r.kind == "fault:drop"]
+    assert drops, "the injector never fired — the drill tested nothing"
+    assert (faulty.transport.bytes_sent[tag]
+            == clean.transport.bytes_sent[tag]
+            + sum(r.by_tag.get(tag, 0) for r in drops))
+    # dropped attempts were charged at the compressed size
+    raw_per_wire = (faulty.transport.raw_bytes[tag]
+                    / faulty.transport.bytes_sent[tag])
+    assert raw_per_wire >= 3.5
+
+
+# ------------------------------------------------- eq. 19 predicted vs. real
+
+def _measured_run(wire):
+    net = NetworkModel(bandwidth_bytes_per_s=1e6, rtt_s=0.0)
+    orch = _build([64], wire=wire, batch=32, network=net)
+    orch.train_epoch()
+    return orch
+
+
+def test_runtime_tl_bytes_and_clock_match_transport_measurement():
+    """One-node serial epoch with rtt=0 and zero compute time: eq. 19's
+    byte term must reproduce ``Transport``'s measured bytes *exactly*,
+    modulo the 8 B/batch loss_sum/n_correct scalars the analytic model
+    doesn't carry — for both the raw and the compressed wire (the
+    satellite fix: 1 B/element + 4 B/row, matching ``compressed_bytes``)."""
+    off = _measured_run(None)
+    comp = _measured_run(INT8)
+    bw = 1e6
+    n_batches = 2
+    model_bytes = payload_bytes(off.params)
+    spec = WorkloadSpec(
+        n_nodes=1, samples_per_node=64, batch_size=32,
+        model_bytes=model_bytes,
+        first_layer_bytes_per_sample=DATRET.hidden[0] * 4,        # X^(1) row
+        logits_bytes_per_sample=DATRET.n_classes * 4,             # δ^(L) row
+        first_layer_param_bytes=(DATRET.in_shape[0] + 1)
+        * DATRET.hidden[0] * 4,                                   # W^(1) + b
+        flops_per_sample_fwd=0.0, flops_per_sample_bwd=0.0,
+        bandwidth_bytes_per_s=bw, rtt_s=0.0)
+    scalars = 8 * n_batches                  # loss_sum f32 + n_correct i32
+    for orch, compressed in ((off, False), (comp, True)):
+        tr = orch.transport
+        predicted = runtime_tl(spec, compressed=compressed,
+                               pipelined=False) * bw
+        measured = (tr.bytes_sent["activations_grads"]
+                    + tr.bytes_sent["model"])
+        assert measured == round(predicted) + scalars
+        # rtt=0 ⇒ the serial clock is exactly bytes / bandwidth
+        assert abs(tr.clock_s * bw - tr.total_bytes) < 1e-3
+        assert abs(tr.clock_s - runtime_tl(spec, compressed=compressed,
+                                           pipelined=False)
+                   - scalars / bw) < 1e-6
