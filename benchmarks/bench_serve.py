@@ -12,6 +12,17 @@ p50/p99 **per-token latency** (inter-token gaps within each request), and
 p50 TTFT (admission → first token), for one dense-attention arch
 (deepseek-7b) and one MLA+MoE arch (deepseek-v2-236b), both reduced.
 
+Two robustness columns ride the same artifact (ISSUE 9):
+
+* ``overload`` — the same open loop pushed to ~2x the measured saturating
+  request rate with per-request SLO deadlines, shedding **on vs off**:
+  goodput (tokens of deadline-met requests / makespan), p99 per-token
+  latency, and shed/abort counts.  Shedding converts a collapsed queue
+  into explicit refusals and keeps the survivors' latency bounded.
+* ``recovery`` — the scripted chaos drill (decode-step crash under
+  supervision): detect → rebuild → re-prefill → first-token wall costs
+  and the token-identity verdict against the fault-free oracle.
+
 Numbers on this container are CPU (Pallas kernels in interpret mode) — the
 load points are chosen to show the under-load → saturation transition, not
 absolute TPU throughput.  Smoke mode (CI: ``benchmarks/run.py --only
@@ -64,13 +75,20 @@ def _make_requests(cfg, n, gen_len, rate, seed):
     return arrivals, reqs
 
 
-def _run_load(model, cfg, params, *, rate, n_requests, gen_len, seed):
-    """One offered-load point: open-loop wall-clock drive."""
+def _run_load(model, cfg, params, *, rate, n_requests, gen_len, seed,
+              slo_s=None, shedding=True):
+    """One offered-load point: open-loop wall-clock drive.
+
+    With ``slo_s`` set, every request carries an absolute deadline
+    (arrival + slo_s) in the engine's clock domain (perf_counter — the
+    same clock the open loop schedules arrivals on) and the overload
+    metrics (goodput, shed/abort counts) are included."""
     from repro.serve import ServeEngine
     eng = ServeEngine(model, cfg, params, num_pages=NUM_PAGES,
                       page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
                       max_len=max(PROMPT_LENS) + gen_len, attention="paged",
-                      decode_priority=1, seed=0)
+                      decode_priority=1, seed=0, shedding=shedding,
+                      clock=time.perf_counter)
     arrivals, reqs = _make_requests(cfg, n_requests, gen_len, rate, seed)
 
     t0 = time.perf_counter()
@@ -79,6 +97,8 @@ def _run_load(model, cfg, params, *, rate, n_requests, gen_len, seed):
         now = time.perf_counter() - t0
         while i < len(reqs) and arrivals[i] <= now:
             reqs[i].arrival = t0 + arrivals[i]
+            if slo_s is not None:
+                reqs[i].deadline = t0 + arrivals[i] + slo_s
             eng.submit(reqs[i])
             i += 1
         if eng.idle:                      # wait for the next open-loop arrival
@@ -88,13 +108,21 @@ def _run_load(model, cfg, params, *, rate, n_requests, gen_len, seed):
     makespan = time.perf_counter() - t0
 
     gaps, ttfts, n_tokens = [], [], 0
+    good_tokens, n_met = 0, 0
     for r in eng.results.values():
         ts = r.token_times
         n_tokens += len(r.tokens)
-        ttfts.append(ts[0] - r.admitted)
-        gaps.extend(float(b - a) for a, b in zip(ts, ts[1:]))
+        if ts:
+            ttfts.append(ts[0] - r.admitted)
+            gaps.extend(float(b - a) for a, b in zip(ts, ts[1:]))
+        req = reqs[r.rid]
+        if (r.finish_reason in ("eos", "length")
+                and (req.deadline is None or ts[-1] <= req.deadline)):
+            good_tokens += len(r.tokens)
+            n_met += 1
     gaps = gaps or [0.0]
-    return {
+    ttfts = ttfts or [0.0]
+    point = {
         "offered_load_rps": float(rate),
         "n_requests": n_requests,
         "tokens": n_tokens,
@@ -103,6 +131,52 @@ def _run_load(model, cfg, params, *, rate, n_requests, gen_len, seed):
         "p50_token_latency_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
         "p99_token_latency_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3),
         "ttft_p50_ms": round(float(np.percentile(ttfts, 50)) * 1e3, 3),
+    }
+    if slo_s is not None:
+        stats = eng.stats()
+        point.update({
+            "goodput_tokens_per_s": round(good_tokens / makespan, 2),
+            "n_deadline_met": n_met,
+            "n_shed": stats["n_shed"],
+            "n_deadline_aborts": stats["n_deadline_aborts"],
+        })
+    return point
+
+
+def _bench_recovery(model, cfg, params, *, gen_len, n_requests=4):
+    """The chaos drill as a benchmark: a scripted decode-step crash under
+    supervision.  Reports the detect/rebuild/re-prefill/first-token wall
+    costs and verifies token identity against the fault-free oracle."""
+    import jax.numpy as jnp
+    import repro.launch.serve as launch_serve
+    from repro.serve import (CRASH, Request, ServeDrill, ServeEngine,
+                             ServeFaultSpec)
+    P = PROMPT_LENS[0]
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(n_requests, P)).astype(np.int32)
+    eng = ServeEngine(model, cfg, params, num_pages=NUM_PAGES,
+                      page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+                      max_len=P + gen_len, attention="paged",
+                      faults=ServeFaultSpec(drills=(ServeDrill(CRASH, 2),)))
+    res = eng.serve([Request(rid=i, prompt=prompts[i],
+                             max_new_tokens=gen_len, seed=i)
+                     for i in range(n_requests)])
+    oracle = np.asarray(launch_serve.generate(model, cfg, params,
+                                              jnp.asarray(prompts), gen_len))
+    identical = all(res[i].tokens == oracle[i].tolist()
+                    for i in range(n_requests))
+    rep = eng.recoveries[0].as_dict()
+    return {
+        "drill": "crash:2",
+        "n_requests": n_requests,
+        "n_survivors": rep["n_survivors"],
+        "token_identical": bool(identical),
+        "detect_ms": round(rep["detect_s"] * 1e3, 2),
+        "rebuild_ms": round(rep["rebuild_s"] * 1e3, 2),
+        "reprefill_ms": round(rep["reprefill_s"] * 1e3, 2),
+        "first_token_ms": round(rep["first_token_s"] * 1e3, 2),
+        "total_ms": round(rep["total_s"] * 1e3, 2),
     }
 
 
@@ -129,6 +203,34 @@ def bench_arch(arch, *, loads, n_requests, gen_len):
         print(f"bench_serve/{arch}@{rate}rps,"
               f"{point['p50_token_latency_ms'] * 1e3:.0f},"
               f"{point['tokens_per_s']}tok/s")
+
+    # overload column: ~2x the measured saturating request rate, with an
+    # SLO wide enough that an unloaded request clears it comfortably
+    sat_rps = max(p["tokens_per_s"] for p in out["loads"].values()) / gen_len
+    base = out["loads"][str(loads[0])]
+    slo_s = (base["ttft_p50_ms"]
+             + 4.0 * gen_len * base["p50_token_latency_ms"]) / 1e3
+    over_rate = round(2.0 * sat_rps, 3)
+    out["overload"] = {
+        "offered_load_rps": over_rate,
+        "slo_ms": round(slo_s * 1e3, 1),
+        "shed_on": _run_load(model, cfg, params, rate=over_rate,
+                             n_requests=n_requests, gen_len=gen_len,
+                             seed=2000, slo_s=slo_s, shedding=True),
+        "shed_off": _run_load(model, cfg, params, rate=over_rate,
+                              n_requests=n_requests, gen_len=gen_len,
+                              seed=2000, slo_s=slo_s, shedding=False),
+    }
+    for leg in ("shed_on", "shed_off"):
+        p = out["overload"][leg]
+        print(f"bench_serve/{arch}/overload/{leg}@{over_rate}rps,"
+              f"goodput={p['goodput_tokens_per_s']}tok/s,"
+              f"shed={p['n_shed']}+{p['n_deadline_aborts']}")
+
+    out["recovery"] = _bench_recovery(model, cfg, params, gen_len=gen_len)
+    print(f"bench_serve/{arch}/recovery,"
+          f"total={out['recovery']['total_ms']}ms,"
+          f"identical={out['recovery']['token_identical']}")
     return out
 
 

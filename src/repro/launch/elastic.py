@@ -34,19 +34,20 @@ reshrink, rollback, replay — is identical.
 """
 from __future__ import annotations
 
-import threading
-import time
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import numpy as np
 
+# the watchdog lives in repro.core.watchdog (shared with the serving
+# engine's supervision loop, PR 9); re-exported here unchanged so all
+# PR 6-era imports keep working
+from repro.core.watchdog import WatchdogTimeout as WatchdogTimeout
+from repro.core.watchdog import call_with_deadline as call_with_deadline
+from repro.core.watchdog import simulate_hang as simulate_hang
+
 KILL = "kill"        # chip dies: the step raises immediately
 HANG = "hang"        # collective never completes: only a deadline sees it
-
-
-class WatchdogTimeout(RuntimeError):
-    """The supervised call did not complete within its deadline."""
 
 
 class DeviceLost(RuntimeError):
@@ -155,44 +156,6 @@ class DeviceFaultInjector:
             if kind is not None:
                 return device, kind
         return None
-
-
-def call_with_deadline(fn, args=(), kwargs=None, *, deadline_s: float,
-                       what: str = "step"):
-    """Run ``fn(*args, **kwargs)`` under a watchdog deadline.
-
-    The call runs on a daemon worker thread; if it does not finish within
-    ``deadline_s`` a :class:`WatchdogTimeout` is raised **on the caller's
-    thread** — the worker (a hung collective, in the fault model) is left
-    to expire on its own.  Exceptions from ``fn`` re-raise here."""
-    if deadline_s <= 0:
-        raise ValueError("deadline_s must be > 0")
-    box = {}
-    done = threading.Event()
-
-    def work():
-        try:
-            box["value"] = fn(*args, **(kwargs or {}))
-        except BaseException as e:  # noqa: BLE001 — re-raised on the caller
-            box["error"] = e
-        finally:
-            done.set()
-
-    threading.Thread(target=work, daemon=True,
-                     name=f"tl-watchdog-{what}").start()
-    if not done.wait(deadline_s):
-        raise WatchdogTimeout(
-            f"{what} exceeded its {deadline_s:.1f}s watchdog deadline "
-            "(hung collective / lost device)")
-    if "error" in box:
-        raise box["error"]
-    return box["value"]
-
-
-def simulate_hang(deadline_s: float):
-    """Stand-in for a hung collective: sleeps past the watchdog deadline
-    (bounded, so the abandoned worker thread eventually exits)."""
-    time.sleep(min(3.0 * deadline_s, deadline_s + 30.0))
 
 
 @dataclass

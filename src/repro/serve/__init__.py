@@ -7,17 +7,27 @@ Layers (bottom-up):
               ``transformer.prefill``), paged decode step (Pallas kernel in
               ``repro.kernels.paged_attention`` or dense gather reference)
   sampling  — per-request RNG streams (batch-composition independent)
-  engine    — :class:`ServeEngine`: admission / batched decode / eviction /
+  faults    — seeded decode-step fault injection (hang/crash) + recovery
+              reporting for the supervised serving path
+  engine    — :class:`ServeEngine`: admission / overload control (SLO
+              deadlines, shedding, priority preemption) / batched decode /
+              KV preemption+restore / fault supervision / eviction /
               compaction scheduler
 
 Proven bit-equal to the static-batch oracle (``repro.launch.serve.generate``)
-by ``tests/test_serve.py``.
+by ``tests/test_serve.py`` — including under preemption/restore, deadline
+shedding, and injected decode hangs/crashes.
 """
 from repro.serve.allocator import OutOfPages, PageAllocator, TRASH_PAGE
 from repro.serve.engine import Request, RequestResult, ServeEngine
+from repro.serve.faults import (CRASH, HANG, ServeDrill, ServeFault,
+                                ServeFaultInjector, ServeFaultSpec,
+                                ServeRecoveryReport, parse_chaos)
 from repro.serve.runner import check_servable, init_pages
 from repro.serve.sampling import request_key, sample_tokens
 
 __all__ = ["OutOfPages", "PageAllocator", "TRASH_PAGE", "Request",
            "RequestResult", "ServeEngine", "check_servable", "init_pages",
-           "request_key", "sample_tokens"]
+           "request_key", "sample_tokens", "CRASH", "HANG", "ServeDrill",
+           "ServeFault", "ServeFaultInjector", "ServeFaultSpec",
+           "ServeRecoveryReport", "parse_chaos"]

@@ -62,18 +62,36 @@ class PageAllocator:
         return pages
 
     def share(self, pages: list[int]) -> list[int]:
-        """Bump refcounts on already-allocated pages (shared prefix)."""
+        """Bump refcounts on already-allocated pages (shared prefix).
+
+        Atomic: an unknown page raises :class:`KeyError` **before** any
+        refcount moves, so a bad call can never half-apply."""
+        missing = sorted({p for p in pages if p not in self._refs})
+        if missing:
+            raise KeyError(
+                f"cannot share unallocated page(s) {missing}: sharing a "
+                "page nobody owns would hand out dangling KV")
         for p in pages:
-            if p not in self._refs:
-                raise KeyError(f"page {p} is not allocated")
             self._refs[p] += 1
         return list(pages)
 
     def free(self, pages: list[int]) -> None:
-        """Drop one reference per page; return refcount-0 pages to the pool."""
+        """Drop one reference per page; return refcount-0 pages to the pool.
+
+        Atomic: a double free or unknown page raises :class:`KeyError`
+        **before** the ledger is touched — duplicates inside one call are
+        counted against the refcount too, so ``free([p, p])`` of a
+        singly-referenced page cannot corrupt the free list."""
+        drops: dict[int, int] = {}
         for p in pages:
-            if p not in self._refs:
-                raise KeyError(f"double free of page {p}")
+            drops[p] = drops.get(p, 0) + 1
+        bad = sorted(p for p, n in drops.items()
+                     if self._refs.get(p, 0) < n)
+        if bad:
+            raise KeyError(
+                f"double free / unknown page(s) {bad}: freeing more "
+                "references than exist would corrupt the refcount ledger")
+        for p in pages:
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 del self._refs[p]

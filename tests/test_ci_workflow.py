@@ -49,8 +49,8 @@ def test_workflow_parses_with_all_triggers(wf):
                          "schedule"}
     assert trig["schedule"], "nightly leg needs a cron schedule"
     assert set(wf["jobs"]) >= {"tests", "bench-smoke", "serve-smoke",
-                               "lint", "nightly-slow", "recovery-drill",
-                               "recovery-drill-tpu"}
+                               "serve-chaos", "lint", "nightly-slow",
+                               "recovery-drill", "recovery-drill-tpu"}
 
 
 def test_fast_tier_runs_tier1_command_verbatim(wf):
@@ -73,10 +73,12 @@ def test_kernel_leg_sets_interpret_mode_explicitly(wf):
 
 
 def test_test_jobs_pin_cpu_backend_and_jax_wheel(wf):
-    for name in ("tests", "bench-smoke", "serve-smoke", "nightly-slow"):
+    for name in ("tests", "bench-smoke", "serve-smoke", "serve-chaos",
+                 "nightly-slow"):
         assert wf["jobs"][name]["env"]["JAX_PLATFORMS"] == "cpu", name
     # pip caching keyed on the pinned requirements file
-    for name in ("tests", "bench-smoke", "serve-smoke", "nightly-slow"):
+    for name in ("tests", "bench-smoke", "serve-smoke", "serve-chaos",
+                 "nightly-slow"):
         setup = [s for s in _steps(wf["jobs"][name])
                  if "setup-python" in s.get("uses", "")][0]
         assert setup["with"]["cache"] == "pip", name
@@ -132,6 +134,24 @@ def test_recovery_drill_job_verifies_the_elastic_guarantee(wf):
     # the loud-failure leg: watchdog-classified hang, pinned exit code
     assert "hang-device:1" in runs and "--elastic" not in runs.split(
         "hang-device:1")[1]
+    assert 'test "$code" -eq 2' in runs
+
+
+def test_serve_chaos_job_verifies_token_identity_and_loud_failure(wf):
+    """The serve-chaos job must (a) run the supervised hang+crash drill
+    and pin the token-identity verdict, and (b) prove the unsupervised
+    flavor fails *loudly* with the CLI's pinned exit code — a timeout kill
+    (124) of a silently wedged engine can never pass."""
+    job = wf["jobs"]["serve-chaos"]
+    assert job["env"]["JAX_PLATFORMS"] == "cpu"
+    runs = " ".join(_run_lines(job))
+    assert "repro.launch.serve" in runs
+    assert "--engine continuous" in runs
+    assert "--chaos hang:3,crash:6" in runs
+    assert "SERVE_DRILL token_identical=true" in runs
+    # the loud-failure leg: watchdog-classified hang, pinned exit code
+    tail = runs.split("--no-supervise")
+    assert len(tail) == 2 and "--chaos hang:1" in tail[0]
     assert 'test "$code" -eq 2' in runs
 
 

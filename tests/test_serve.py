@@ -14,6 +14,19 @@ The load-bearing guarantees (ISSUE 7 acceptance criteria):
   single-token sequences, and both attention paths;
 * seeded ``temperature>0`` streams depend only on (base key, request seed,
   step) — never on co-batched traffic — and equal the oracle's streams.
+
+Serving under fire (ISSUE 9 acceptance criteria):
+
+* KV preemption/restore is token-identical at page-boundary and
+  ``max_new_tokens=1`` edges, for greedy and sampled streams, across
+  arbitrary hypothesis-driven interleavings (with per-step allocator
+  invariant checks);
+* SLO deadlines shed queued requests and abort in-flight ones explicitly
+  (never silently), and the aborted partial prefix is still the oracle's;
+  head-of-line bypass is bounded; priorities preempt lower in-flight work;
+* injected decode-step hangs (watchdog-classified) and crashes recover
+  under supervision with streams bit-identical to the fault-free run, and
+  fail loudly (with a state dump) without supervision.
 """
 import numpy as np
 import pytest
@@ -28,8 +41,10 @@ from repro.configs import get_config
 from repro.kernels.paged_attention import (paged_decode_attention,
                                            paged_decode_attention_ref)
 from repro.models import build_model
-from repro.serve import (OutOfPages, PageAllocator, Request, ServeEngine,
-                         TRASH_PAGE, check_servable)
+from repro.serve import (CRASH, HANG, OutOfPages, PageAllocator, Request,
+                         ServeDrill, ServeEngine, ServeFault,
+                         ServeFaultInjector, ServeFaultSpec, TRASH_PAGE,
+                         check_servable, parse_chaos)
 
 PAGE = 4          # one page size across tests -> shared decode-fn compiles
 POOL = 32
@@ -93,6 +108,38 @@ class TestPageAllocator:
         alloc.free(pages)
         with pytest.raises(KeyError):
             alloc.free(pages)
+
+    def test_free_is_atomic_on_partial_double_free(self):
+        """A bad batch (one live page + one stale) must raise *before* any
+        refcount moves — the live page stays allocated, nothing leaks."""
+        alloc = PageAllocator(8, PAGE)
+        live = alloc.alloc(2)
+        stale = alloc.alloc(1)
+        alloc.free(stale)
+        with pytest.raises(KeyError):
+            alloc.free(live[:1] + stale)
+        assert alloc.live_pages == 2              # untouched by the bad call
+        alloc.free(live)
+        assert alloc.free_pages == 7 and alloc.live_pages == 0
+
+    def test_free_counts_duplicates_within_one_call(self):
+        """``free([p, p])`` of a singly-referenced page is a double free —
+        it must raise, not push ``p`` onto the free list twice."""
+        alloc = PageAllocator(8, PAGE)
+        [p] = alloc.alloc(1)
+        with pytest.raises(KeyError):
+            alloc.free([p, p])
+        assert alloc.live_pages == 1
+        alloc.free([p])
+        assert alloc.free_pages == 7
+
+    def test_share_unknown_page_is_atomic(self):
+        alloc = PageAllocator(8, PAGE)
+        pages = alloc.alloc(2)
+        with pytest.raises(KeyError):
+            alloc.share(pages + [7])              # 7 never allocated
+        alloc.free(pages)                         # refcounts never bumped
+        assert alloc.free_pages == 7 and alloc.live_pages == 0
 
     def test_refcounted_sharing(self):
         alloc = PageAllocator(8, PAGE)
@@ -422,6 +469,357 @@ def test_unservable_archs_raise(arch, reason):
 def test_servable_archs_pass():
     for arch in ("deepseek-7b", "deepseek-v2-236b", "qwen2.5-32b"):
         check_servable(get_config(arch, reduced=True))
+
+
+# ==================== serving under fire (ISSUE 9): preempt/SLO/faults
+
+class FakeClock:
+    """Manually-advanced engine clock for deterministic SLO tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_submit_rejects_duplicate_rid(dense_setup):
+    cfg, model, params = dense_setup
+    eng = _engine(cfg, model, params)
+    [p] = _prompts(cfg, [4])
+    eng.submit(Request(rid=7, prompt=p, max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate rid"):
+        eng.submit(Request(rid=7, prompt=p, max_new_tokens=2))
+
+
+@pytest.mark.parametrize("attention", ["dense", "paged"])
+@pytest.mark.parametrize("preempt_step", [1, 2, 3, 4])
+def test_preempt_restore_token_identical(dense_setup, attention,
+                                         preempt_step):
+    """Forced KV eviction at every phase of a stream — right after the
+    prefill token (re-prefill is the bare prompt), at an exact page
+    boundary, and deep into decode — restores bit-identically: the
+    re-prefilled prefix resumes the same RNG stream position."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 3])
+    gens = [6, 7]
+    eng = _engine(cfg, model, params, attention=attention)
+    res = eng.serve([Request(rid=i, prompt=prompts[i],
+                             max_new_tokens=gens[i]) for i in range(2)],
+                    preempt_at=[(preempt_step, 0)])
+    for i in range(2):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i],
+                                        gens[i]), (attention, i)
+        assert res[i].finish_reason == "length"
+    assert res[0].preemptions == 1 and res[1].preemptions == 0
+    assert eng.n_preempted == 1 and eng.n_restored == 1
+    assert eng.alloc.live_pages == 0 and eng._reserved == 0
+
+
+def test_preempt_with_single_token_cobatch(dense_setup):
+    """max_new_tokens=1 edge: a request that finishes straight out of
+    prefill admits *while* another sequence sits evicted, and neither
+    stream moves."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 2])
+    eng = _engine(cfg, model, params)
+    res = eng.serve([Request(rid=0, prompt=prompts[0], max_new_tokens=6),
+                     Request(rid=1, prompt=prompts[1], max_new_tokens=1)],
+                    arrival_steps=[0, 2], preempt_at=[(2, 0)])
+    assert res[0].tokens == _oracle(model, cfg, params, prompts[0], 6)
+    assert res[1].tokens == _oracle(model, cfg, params, prompts[1], 1)
+    assert res[0].preemptions == 1
+
+
+def test_preempt_restore_preserves_sampled_stream(dense_setup):
+    """Seeded temperature>0 stream across an eviction == the solo oracle
+    stream: RNG position folds in (seed, step), never cache history."""
+    cfg, model, params = dense_setup
+    [prompt] = _prompts(cfg, [5])
+    eng = _engine(cfg, model, params, seed=0)
+    res = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=6,
+                             temperature=0.8, seed=7)],
+                    preempt_at=[(3, 0)])
+    assert res[0].preemptions == 1
+    assert res[0].tokens == _oracle(model, cfg, params, prompt, 6,
+                                    temperature=0.8, seed=7)
+
+
+@given(arrivals=st.lists(st.integers(0, 8), min_size=3, max_size=3),
+       preempts=st.lists(st.tuples(st.integers(1, 12), st.integers(0, 2)),
+                         min_size=0, max_size=4))
+@settings(max_examples=5, deadline=None)
+def test_preempt_interleavings_conserve_pages_property(arrivals, preempts):
+    """Hypothesis: arbitrary admit/preempt/restore/evict interleavings
+    keep the free list conserved, never double-map a page, and stay
+    token-identical.  ``check_invariants`` runs after every step."""
+    cfg, model, params = _get_setup("deepseek-7b")
+    prompts = _prompts(cfg, [5, 1, 7], seed=11)
+    gens = [6, 3, 5]
+    eng = _engine(cfg, model, params)
+    order = sorted(range(3), key=lambda i: arrivals[i])
+    i = 0
+    while i < len(order) or not eng.idle:
+        while i < len(order) and eng.n_steps >= arrivals[order[i]]:
+            eng.submit(Request(rid=order[i], prompt=prompts[order[i]],
+                               max_new_tokens=gens[order[i]]))
+            i += 1
+        if eng.idle and i < len(order):
+            eng.n_steps = arrivals[order[i]]
+            continue
+        for st_, rid in preempts:
+            if st_ == eng.n_steps:
+                eng.preempt(rid)
+        eng.step()
+        eng.check_invariants()
+    for r in range(3):
+        assert eng.results[r].tokens == _oracle(model, cfg, params,
+                                                prompts[r], gens[r]), r
+    assert eng.alloc.live_pages == 0
+    assert eng.alloc.free_pages == eng.alloc.num_pages - 1
+
+
+def test_overcommit_out_of_pages_preempts_victim(dense_setup):
+    """Overcommit mode admits on prompt pages only, so lazy growth can hit
+    ``OutOfPages`` mid-decode; the engine survives by evicting the
+    youngest lowest-priority sequence, and every stream stays oracle."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 5])
+    eng = _engine(cfg, model, params, num_pages=5, max_len=12,
+                  overcommit=True)
+    res = eng.serve([Request(rid=i, prompt=prompts[i], max_new_tokens=6)
+                     for i in range(2)])
+    assert eng.n_preempted >= 1                   # growth ran out of pages
+    for i in range(2):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i], 6), i
+    assert eng.alloc.live_pages == 0 and eng._reserved == 0
+
+
+# --------------------------------------------------- SLO / overload control
+
+def test_deadline_aborts_inflight_with_partial_prefix(dense_setup):
+    """A sequence past its deadline is aborted mid-stream: pages freed,
+    result flagged partial, and the partial tokens are exactly the oracle
+    prefix (an abort never corrupts what was already emitted)."""
+    cfg, model, params = dense_setup
+    [prompt] = _prompts(cfg, [5])
+    clk = FakeClock()
+    eng = _engine(cfg, model, params, clock=clk)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8,
+                       deadline=5.0))
+    for _ in range(3):
+        eng.step()
+    emitted = len(eng.results[0].tokens)
+    assert 0 < emitted < 8
+    clk.t = 10.0                                  # blow the SLO
+    eng.step()
+    assert eng.idle
+    r = eng.results[0]
+    assert r.finish_reason == "deadline" and r.partial
+    assert r.tokens == _oracle(model, cfg, params, prompt, 8)[:emitted]
+    assert eng.n_deadline_aborts == 1 and 0 in eng.shed
+    assert eng.alloc.live_pages == 0 and eng._reserved == 0
+
+
+def test_queued_request_past_deadline_is_shed_explicitly(dense_setup):
+    """Shedding is never silent: the refused request lands in ``results``
+    with finish_reason='shed' and its rid in ``engine.shed``."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 4])
+    clk = FakeClock()
+    eng = _engine(cfg, model, params, num_pages=5, max_len=16, clock=clk)
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=8))
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=4,
+                       deadline=2.0))             # queued: pool fits one
+    eng.step()
+    assert len(eng.active) == 1 and len(eng.pending) == 1
+    clk.t = 3.0                                   # rid 1 expires in queue
+    res = eng.run()
+    assert res[1].finish_reason == "shed" and res[1].tokens == []
+    assert eng.shed == [1] and eng.n_shed == 1
+    assert res[0].tokens == _oracle(model, cfg, params, prompts[0], 8)
+    assert set(res) == {0, 1}                     # nobody silently dropped
+
+
+def test_provably_unmeetable_slo_shed_at_admission(dense_setup):
+    """Admission control sheds a request whose deadline cannot be met even
+    with zero queue delay (max_new x rolling step clock overshoots)."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 4])
+    clk = FakeClock()
+    eng = _engine(cfg, model, params, clock=clk)
+    eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=4))
+    def _stepped():
+        clk.t += 1.0                              # each engine step: 1s
+        return None
+    real_decode = eng._decode_step
+    eng._decode_step = lambda: (real_decode(), _stepped())[0]
+    eng.step(); eng.step()                        # step clock EMA warms up
+    assert eng._step_ema and eng._step_ema > 0.5
+    # 8 tokens x ~1s/step >> 3s of headroom: provably unmeetable
+    eng.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=8,
+                       deadline=clk.t + 3.0))
+    res = eng.run()
+    assert res[1].finish_reason == "shed" and eng.n_shed == 1
+    assert res[0].tokens == _oracle(model, cfg, params, prompts[0], 4)
+
+
+def test_shedding_off_never_sheds(dense_setup):
+    cfg, model, params = dense_setup
+    [prompt] = _prompts(cfg, [5])
+    clk = FakeClock()
+    eng = _engine(cfg, model, params, clock=clk, shedding=False)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6,
+                       deadline=0.0))             # already expired
+    clk.t = 99.0
+    res = eng.run()
+    assert res[0].finish_reason == "length"
+    assert res[0].tokens == _oracle(model, cfg, params, prompt, 6)
+
+
+def test_small_request_bypasses_blocked_giant(dense_setup):
+    """Head-of-line bypass: a giant blocked on pages does not starve a
+    small request that fits *now*; with ``hol_bypass=0`` admission is
+    strict FIFO and the small one waits."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 7, 3])
+    reqs = lambda: [  # noqa: E731
+        Request(rid=0, prompt=prompts[0], max_new_tokens=6),   # holds pool
+        Request(rid=1, prompt=prompts[1], max_new_tokens=4),   # giant: 3 pg
+        Request(rid=2, prompt=prompts[2], max_new_tokens=1),   # small: 1 pg
+    ]
+    bypass = _engine(cfg, model, params, num_pages=5, max_len=12)
+    res = bypass.serve(reqs())
+    assert res[2].admitted < res[1].admitted      # small went around
+    for i, g in ((0, 6), (1, 4), (2, 1)):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i], g), i
+
+    fifo = _engine(cfg, model, params, num_pages=5, max_len=12,
+                   hol_bypass=0)
+    res = fifo.serve(reqs())
+    assert res[2].admitted >= res[1].admitted     # strict FIFO: giant first
+    for i, g in ((0, 6), (1, 4), (2, 1)):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i], g), i
+
+
+def test_priority_preempts_lower_inflight(dense_setup):
+    """A high-priority arrival evicts a lower-priority in-flight victim for
+    its pages; the victim restores afterwards and both streams stay
+    oracle-identical."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 5])
+    eng = _engine(cfg, model, params, num_pages=5, max_len=12)
+    res = eng.serve([
+        Request(rid=0, prompt=prompts[0], max_new_tokens=6, priority=0),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=6, priority=5),
+    ], arrival_steps=[0, 2])
+    assert res[0].preemptions == 1 and res[1].preemptions == 0
+    assert res[1].admitted < res[0].token_times[-1]   # jumped the line
+    for i in range(2):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i], 6), i
+    assert eng.n_preempted == 1 and eng.n_restored == 1
+    assert eng.alloc.live_pages == 0 and eng._reserved == 0
+
+
+# ------------------------------------------------ fault-injected serving
+
+def test_chaos_injector_is_order_independent():
+    spec = ServeFaultSpec(crash_prob=0.2, hang_prob=0.3, seed=5)
+    inj = ServeFaultInjector(spec)
+    forward = [inj.decide(s) for s in range(40)]
+    shuffled = {s: ServeFaultInjector(spec).decide(s)
+                for s in np.random.default_rng(0).permutation(40)}
+    assert forward == [shuffled[s] for s in range(40)]
+    assert CRASH in forward and HANG in forward and None in forward
+
+
+def test_parse_chaos():
+    assert parse_chaos("hang:3,crash:6") == (ServeDrill(HANG, 3),
+                                             ServeDrill(CRASH, 6))
+    with pytest.raises(ValueError):
+        parse_chaos("explode:3")
+    with pytest.raises(ValueError):
+        parse_chaos("hang:x")
+
+
+@pytest.mark.parametrize("attention", ["dense", "paged"])
+def test_crash_recovery_token_identical(dense_setup, attention):
+    """An injected decode-step crash under supervision: the engine rebuilds
+    pools+allocator from host truth, re-prefills every survivor, and all
+    completed streams equal the fault-free oracle bit-for-bit."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 1, 7])
+    gens = [6, 4, 8]
+    eng = _engine(cfg, model, params, attention=attention,
+                  faults=ServeFaultSpec(drills=(ServeDrill(CRASH, 4),)))
+    res = eng.serve([Request(rid=i, prompt=prompts[i],
+                             max_new_tokens=gens[i]) for i in range(3)],
+                    arrival_steps=[0, 1, 2])
+    assert eng.n_rebuilds == 1
+    [rep] = eng.recoveries
+    assert rep.cause == CRASH and rep.step == 4 and rep.n_survivors >= 1
+    assert rep.first_token_s >= 0.0
+    for i in range(3):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i],
+                                        gens[i]), (attention, i)
+        assert res[i].finish_reason == "length"
+    assert eng.alloc.live_pages == 0 and eng._reserved == 0
+
+
+def test_hang_recovery_via_watchdog(dense_setup):
+    """An injected decode hang is classified by the watchdog deadline, then
+    recovered exactly like a crash — streams stay oracle-identical."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 3])
+    # warm the jit caches first so a cold compile can never be
+    # misclassified as the injected hang
+    warm = _engine(cfg, model, params)
+    warm.serve([Request(rid=i, prompt=prompts[i], max_new_tokens=2)
+                for i in range(2)])
+    eng = _engine(cfg, model, params, watchdog_s=1.0,
+                  faults=ServeFaultSpec(drills=(ServeDrill(HANG, 3),)))
+    res = eng.serve([Request(rid=i, prompt=prompts[i], max_new_tokens=5)
+                     for i in range(2)])
+    assert eng.n_rebuilds == 1
+    assert eng.recoveries[0].cause == HANG
+    assert eng.recoveries[0].detect_s >= 1.0      # the watchdog deadline
+    for i in range(2):
+        assert res[i].tokens == _oracle(model, cfg, params, prompts[i], 5), i
+
+
+def test_unsupervised_fault_raises_with_state_dump(dense_setup):
+    """supervise=False: the fault propagates loudly (the CLI maps it to
+    exit 2) carrying a full engine-state dump for postmortems."""
+    cfg, model, params = dense_setup
+    [prompt] = _prompts(cfg, [5])
+    eng = _engine(cfg, model, params, supervise=False,
+                  faults=ServeFaultSpec(drills=(ServeDrill(CRASH, 2),)))
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    with pytest.raises(ServeFault, match="engine state at fault"):
+        eng.run()
+
+
+def test_hang_spec_requires_watchdog(dense_setup):
+    cfg, model, params = dense_setup
+    with pytest.raises(ValueError, match="watchdog"):
+        _engine(cfg, model, params,
+                faults=ServeFaultSpec(drills=(ServeDrill(HANG, 1),)))
+
+
+def test_run_exhaustion_dumps_engine_state(dense_setup):
+    """The stuck-engine diagnostic replaces the bare RuntimeError: it names
+    queued/active rids, page occupancy, and reservation totals."""
+    cfg, model, params = dense_setup
+    prompts = _prompts(cfg, [5, 4])
+    eng = _engine(cfg, model, params)
+    eng.submit(Request(rid=3, prompt=prompts[0], max_new_tokens=8))
+    eng.submit(Request(rid=9, prompt=prompts[1], max_new_tokens=8))
+    with pytest.raises(RuntimeError) as ei:
+        eng.run(max_steps=2)
+    msg = str(ei.value)
+    assert "not idle after 2 steps" in msg
+    assert "3(len=" in msg and ("9(len=" in msg or "rids=[9]" in msg)
+    assert "free=" in msg and "reserved=" in msg and "shed=" in msg
 
 
 # ================================================================ CLI shim
