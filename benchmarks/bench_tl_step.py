@@ -49,6 +49,13 @@ with 8 forced host devices, the (4, 2) host mesh):
   the measured counterpart of ``runtime_model.recovery_cost``; re-jit for
   the shrunken mesh dominates, replay scales with rollback depth.
 
+The full run also measures the *hierarchy* column: flat vs two-tier
+(``HierarchicalOrchestrator``) simulated clock at 64/256/1024 nodes under
+a uniform one-batch-per-epoch composition, next to the eq. 19 two-tier
+analytic prediction (``runtime_model.runtime_tl(hierarchy=...)``) — the
+clock-vs-node-count chart of the hierarchical-TL tentpole.  The 64-node
+point runs standalone as ``benchmarks/run.py --only hierarchy_smoke``.
+
 ``BENCH_tl_step.json`` at the repo root is the repo's step-time perf
 *trajectory*: a list of runs keyed by git rev, appended to (never
 overwritten) on each invocation; run via ``benchmarks/run.py`` (smoke) or
@@ -76,6 +83,20 @@ BATCH_SIZE = 64
 SIM_COMPUTE_S_PER_SAMPLE = 1e-4
 SIM_BP_S_PER_SAMPLE = 5e-4
 
+# ---- two-tier hierarchy column (clock vs node count) -----------------------
+# 2 samples/node and batch_size = 2·n_nodes give exactly ONE virtual batch
+# per epoch in which every node contributes exactly 2 rows — the uniform
+# composition runtime_model's two-tier branch assumes, so the analytic
+# prediction is byte-exact against the measured transport clock.  rtt=0
+# keeps the alignment exact (the same regime the existing eq. 19 alignment
+# test pins); the 8 Gb/s link keeps the serialized root merge (one gradient
+# pytree per subtree) from drowning the parallel-lane win.
+HIER_NODE_COUNTS = (64, 256, 1024)
+HIER_SUBTREES = {64: 8, 256: 16, 1024: 32}
+HIER_SAMPLES_PER_NODE = 2
+HIER_BW = 1e9
+HIER_RTT = 0.0
+
 
 def _git_rev() -> str:
     try:
@@ -92,6 +113,7 @@ def _build_orchestrator(n_nodes: int, *, fused: bool, pipelined: bool = False,
     from repro.configs.paper_models import DATRET
     from repro.core.node import TLNode
     from repro.core.orchestrator import TLOrchestrator
+    from repro.core.plan import PlanSpec
     from repro.core.transport import Transport
     from repro.models.small import SmallModel
     from repro.optim import sgd
@@ -111,7 +133,7 @@ def _build_orchestrator(n_nodes: int, *, fused: bool, pipelined: bool = False,
             compute_time_fn=lambda k: SIM_COMPUTE_S_PER_SAMPLE * k,
             bp_time_fn=lambda n: SIM_BP_S_PER_SAMPLE * n)
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(wire=wire),
-                          batch_size=BATCH_SIZE, seed=0,
+                          batch_size=BATCH_SIZE, plan=PlanSpec(seed=0),
                           fused=fused, donate=fused, pipelined=pipelined,
                           reassembly=reassembly, **time_kw)
     orch.initialize(jax.random.PRNGKey(0))
@@ -164,6 +186,114 @@ def _wire_compression(n_nodes: int, epochs: int) -> dict:
                 tr.raw_bytes[tag] / max(tr.bytes_sent[tag], 1), 2),
         }
     return col
+
+
+def _build_hier_orchestrator(n_nodes: int, n_subtrees: Optional[int]):
+    """Flat (``n_subtrees=None``) or two-tier simulated-time orchestrator at
+    the hierarchy column's uniform composition: 2 samples/node, one virtual
+    batch per epoch spanning the whole dataset."""
+    from repro.configs.paper_models import DATRET
+    from repro.core.hierarchy import HierarchicalOrchestrator
+    from repro.core.node import TLNode
+    from repro.core.orchestrator import TLOrchestrator
+    from repro.core.plan import PlanSpec
+    from repro.core.transport import NetworkModel, Transport
+    from repro.models.small import SmallModel
+    from repro.optim import sgd
+
+    cfg = DATRET
+    model = SmallModel(cfg)
+    k = HIER_SAMPLES_PER_NODE
+    r = np.random.default_rng(0)
+    nodes = [TLNode(i, model,
+                    r.normal(size=(k,) + cfg.in_shape).astype(np.float32),
+                    r.integers(0, cfg.n_classes, k), jit_visits=True)
+             for i in range(n_nodes)]
+    tr = Transport(network=NetworkModel(bandwidth_bytes_per_s=HIER_BW,
+                                        rtt_s=HIER_RTT))
+    kw = dict(plan=PlanSpec(seed=0, batch_size=k * n_nodes),
+              compute_time_fn=lambda m: SIM_COMPUTE_S_PER_SAMPLE * m,
+              bp_time_fn=lambda m: SIM_BP_S_PER_SAMPLE * m, fused=True)
+    if n_subtrees is None:
+        orch = TLOrchestrator(model, nodes, sgd(0.05), tr, **kw)
+    else:
+        orch = HierarchicalOrchestrator(model, nodes, sgd(0.05), tr,
+                                        n_subtrees=n_subtrees, **kw)
+    orch.initialize(jax.random.PRNGKey(0))
+    return orch
+
+
+def _hier_spec(n_nodes: int, model_bytes: int):
+    """The WorkloadSpec matching ``_build_hier_orchestrator`` byte for byte
+    and tick for tick (SIM_* seconds re-expressed as FLOPs / FLOP rates)."""
+    from repro.configs.paper_models import DATRET
+    from repro.core.runtime_model import WorkloadSpec
+    client = 1e12
+    return WorkloadSpec(
+        n_nodes=n_nodes, samples_per_node=HIER_SAMPLES_PER_NODE,
+        batch_size=HIER_SAMPLES_PER_NODE * n_nodes,
+        model_bytes=model_bytes,
+        first_layer_bytes_per_sample=DATRET.hidden[0] * 4,
+        logits_bytes_per_sample=DATRET.n_classes * 4,
+        first_layer_param_bytes=(DATRET.in_shape[0] + 1)
+        * DATRET.hidden[0] * 4,
+        flops_per_sample_fwd=SIM_COMPUTE_S_PER_SAMPLE / 2 * client,
+        flops_per_sample_bwd=SIM_COMPUTE_S_PER_SAMPLE / 2 * client,
+        client_flops_per_s=client,
+        server_flops_per_s=client * SIM_COMPUTE_S_PER_SAMPLE
+        / SIM_BP_S_PER_SAMPLE,
+        bandwidth_bytes_per_s=HIER_BW, rtt_s=HIER_RTT)
+
+
+def _hierarchy_clock(node_counts=HIER_NODE_COUNTS) -> dict:
+    """Clock vs node count, flat vs two-tier, measured (transport clock of a
+    real simulated epoch) and predicted (eq. 19 two-tier branch).  The flat
+    clock grows with the serial ΣT_comp,client + full-batch BP; the
+    hierarchy divides both across subtree lanes and pays a serialized
+    per-subtree merge — the crossover is the column's point."""
+    from repro.core.runtime_model import runtime_tl
+    from repro.core.transport import payload_bytes
+    col = {}
+    for n in node_counts:
+        s = HIER_SUBTREES[n]
+        flat = _build_hier_orchestrator(n, None)
+        flat.train_epoch()
+        jax.block_until_ready(flat.params)
+        flat_clock = flat.transport.clock_s
+        hier = _build_hier_orchestrator(n, s)
+        hier.train_epoch()
+        jax.block_until_ready(hier.params)
+        hier_clock = hier.transport.clock_s
+        spec = _hier_spec(n, payload_bytes(flat.params))
+        pred_flat = runtime_tl(spec, hierarchy=1)
+        pred_hier = runtime_tl(spec, hierarchy=s)
+        col[str(n)] = {
+            "n_subtrees": s,
+            "flat_clock_s": round(flat_clock, 6),
+            "two_tier_clock_s": round(hier_clock, 6),
+            "speedup": round(flat_clock / hier_clock, 3),
+            "predicted_flat_clock_s": round(pred_flat, 6),
+            "predicted_two_tier_clock_s": round(pred_hier, 6),
+            "predicted_err_flat": round(abs(pred_flat - flat_clock), 9),
+            "predicted_err_two_tier": round(abs(pred_hier - hier_clock), 9),
+        }
+        print(f"bench_tl_step/hierarchy_nodes={n},"
+              f"{hier_clock * 1e6:.0f},subtrees={s},"
+              f"flat={flat_clock:.4f}s,two_tier={hier_clock:.4f}s,"
+              f"speedup={flat_clock / hier_clock:.2f}x,"
+              f"pred_err={abs(pred_hier - hier_clock):.2e}s")
+    return col
+
+
+def hierarchy_main(smoke: bool = False) -> dict:
+    """Standalone hierarchy column (``benchmarks/run.py --only
+    hierarchy_smoke`` runs the 64-node point as the CI smoke)."""
+    counts = (64,) if smoke else HIER_NODE_COUNTS
+    return {"model": "datret-mlp",
+            "samples_per_node": HIER_SAMPLES_PER_NODE,
+            "bandwidth_bytes_per_s": HIER_BW, "rtt_s": HIER_RTT,
+            "backend": jax.default_backend(),
+            "nodes": _hierarchy_clock(counts)}
 
 
 def _simulated_clock(n_nodes: int, *, pipelined: bool) -> float:
@@ -405,7 +535,7 @@ def _load_runs(out_path: str) -> list:
 
 def run(node_counts=(2, 4, 8), epochs: int = 3,
         out_path: Optional[str] = OUT_PATH,
-        production: bool = True) -> dict:
+        production: bool = True, hierarchy: bool = True) -> dict:
     """One benchmark entry.  ``out_path=None`` skips the trajectory write
     (smoke mode: ``benchmarks/run.py`` wraps the returned entry in its
     standard ``BENCH_<name>.json`` artifact instead)."""
@@ -451,6 +581,10 @@ def run(node_counts=(2, 4, 8), epochs: int = 3,
         "backend": jax.default_backend(),
         "nodes": results,
     }
+    if hierarchy:
+        # clock vs node count far beyond the flat sweep: flat serial vs
+        # two-tier, measured and eq.-19-predicted, at 64/256/1024 nodes
+        entry["hierarchy"] = _hierarchy_clock()
     if production:
         entry.update(_production_columns())
     if out_path is not None:
@@ -471,12 +605,13 @@ def run(node_counts=(2, 4, 8), epochs: int = 3,
 def main(smoke: bool = False) -> dict:
     if smoke:
         # fast per-PR regression signal: 2 nodes, one measured epoch, same
-        # entry shape, no production subprocess.  The smoke artifact is
-        # written by benchmarks/run.py's standard wrapper
-        # (BENCH_tl_step_smoke.json), not by this module — the trajectory
-        # file stays full-sweep-only.
+        # entry shape, no production subprocess and no hierarchy sweep (the
+        # hierarchy smoke is its own run.py entry, ``hierarchy_smoke``).
+        # The smoke artifact is written by benchmarks/run.py's standard
+        # wrapper (BENCH_tl_step_smoke.json), not by this module — the
+        # trajectory file stays full-sweep-only.
         return run(node_counts=(2,), epochs=1, out_path=None,
-                   production=False)
+                   production=False, hierarchy=False)
     return run()
 
 

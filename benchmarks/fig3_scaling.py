@@ -14,6 +14,7 @@ import jax
 from repro.configs.paper_models import DATRET
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.runtime_model import (WorkloadSpec, runtime_fl, runtime_sfl,
                                       runtime_sl, runtime_slp, runtime_tl)
 from repro.core.transport import NetworkModel, Transport
@@ -52,7 +53,7 @@ def simulated_tl_curve(nodes=(2, 4, 8)):
                                             rtt_s=0.02))
         tl_nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
         orch = TLOrchestrator(model, tl_nodes, sgd(0.05), tr, batch_size=40,
-                              seed=0, check_consistency=False,
+                              plan=PlanSpec(seed=0), check_consistency=False,
                               cache_model_per_epoch=True)
         orch.initialize(jax.random.PRNGKey(0))
         orch.train_epoch()

@@ -10,6 +10,8 @@
   roofline_report — the roofline table from the dry-run artifacts
   bench_tl_step   — eager vs fused TL step-time (smoke: 2 nodes); the
                     full sweep is ``python benchmarks/bench_tl_step.py``
+  hierarchy_smoke — two-tier (hierarchical) vs flat simulated clock at 64
+                    nodes; the 64/256/1024 sweep rides the full tl_step run
   table1_quality  — paper Table 1: quality of CL/TL/FL/SL/SL+/SFL across
                     four dataset families
   serve           — open-loop Poisson serving benchmark: continuous batching
@@ -53,6 +55,9 @@ def main(argv=None) -> None:
         # (BENCH_tl_step_smoke.json) like every other benchmark; only the
         # full sweep appends to the BENCH_tl_step.json trajectory
         ("tl_step_smoke", lambda: bench_tl_step.main(smoke=True)),
+        # two-tier hierarchy clock at 64 simulated nodes (the full
+        # 64/256/1024 sweep rides the bench_tl_step full run)
+        ("hierarchy_smoke", lambda: bench_tl_step.hierarchy_main(smoke=True)),
         ("table1_quality", table1_quality.main),
         ("serve", bench_serve.main),
         ("serve_smoke", lambda: bench_serve.main(smoke=True)),

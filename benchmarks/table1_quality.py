@@ -17,6 +17,7 @@ from repro.configs.paper_models import DATRET, TINY_TRANSFORMER
 from repro.core import baselines as B
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.data.datasets import (imbalanced_binary, shard_cluster, shard_iid,
                                  shard_noniid, tabular, text_tokens)
@@ -31,7 +32,8 @@ LR = 0.05
 def _train_tl(model, shards, key, epochs, batch):
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(LR), Transport(),
-                          batch_size=batch, seed=0, check_consistency=False)
+                          batch_size=batch, plan=PlanSpec(seed=0),
+                          check_consistency=False)
     orch.initialize(key)
     for _ in range(epochs):
         orch.train_epoch()

@@ -13,6 +13,7 @@ from repro.configs.paper_models import DATRET
 from repro.core import baselines as B
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.runtime_model import (WorkloadSpec, runtime_fl, runtime_sfl,
                                       runtime_sl, runtime_slp, runtime_tl)
 from repro.core.transport import NetworkModel, Transport, WirePolicy
@@ -78,7 +79,7 @@ def simulated_rows(n_nodes=8, compress=False):
                    wire=WirePolicy.visits("int8") if compress else None)
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=30,
-                          seed=0, check_consistency=False,
+                          plan=PlanSpec(seed=0), check_consistency=False,
                           cache_model_per_epoch=True)
     orch.initialize(key)
     orch.train_epoch()

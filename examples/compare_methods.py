@@ -8,7 +8,7 @@ import jax
 import dataclasses
 
 from repro.configs.paper_models import DATRET
-from repro.core import TLNode, TLOrchestrator, Transport
+from repro.core import PlanSpec, TLNode, TLOrchestrator, Transport
 from repro.core import baselines as B
 from repro.data.datasets import shard_noniid, tabular
 from repro.models.small import SmallModel
@@ -37,7 +37,7 @@ def main():
     # cache_model_per_epoch=True is the §5.2 bandwidth knob but introduces
     # within-epoch staleness and is NOT lossless
     orch = TLOrchestrator(model, nodes, sgd(LR), tr, batch_size=BATCH,
-                          seed=0, check_consistency=False)
+                          plan=PlanSpec(seed=0), check_consistency=False)
     orch.initialize(key)
     for _ in range(EPOCHS):
         orch.train_epoch()

@@ -2,22 +2,31 @@
 
 * ``virtual_batch``  — Algorithm 1 (index retrieval, global re-indexing,
                        shuffling, traversal plan)
+* ``plan``           — traversal planning (planner/executor split):
+                       ``TraversalPlan``, ``Planner`` protocol,
+                       ``FlatPlanner`` / ``TreePlanner``, ``PlanSpec``
 * ``node`` / ``orchestrator`` — Algorithm 2 protocol over a byte-accounting
-                       ``transport``
+                       ``transport``; the orchestrator executes plans
+* ``hierarchy``      — two-tier orchestration: subtree executors under a
+                       contribution-merging root (lossless)
 * ``baselines``      — CL / FL (FedAvg) / SL / SL+ / SFL comparison methods
 * ``pipeline``       — double-buffered epoch engine (cross-batch overlap of
                        node visits with centralized BP; lossless reordering)
 * ``tl_step``        — production pjit TL train/serve steps (multi-pod)
 * ``runtime_model``  — analytic runtime, paper eqs. (15)-(19)
 """
+from repro.core.hierarchy import HierarchicalOrchestrator
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
 from repro.core.pipeline import PipelinedEpochEngine, pipelined_train_epoch
+from repro.core.plan import (FlatPlanner, Planner, PlanSpec, TraversalPlan,
+                             TreePlanner)
 from repro.core.transport import NetworkModel, Transport, payload_bytes
 from repro.core.virtual_batch import (IndexRange, VirtualBatch,
                                       VirtualBatchPlan, create_virtual_batches)
 
-__all__ = ["TLNode", "TLOrchestrator", "NetworkModel", "Transport",
-           "payload_bytes", "IndexRange", "VirtualBatch", "VirtualBatchPlan",
-           "create_virtual_batches", "PipelinedEpochEngine",
-           "pipelined_train_epoch"]
+__all__ = ["TLNode", "TLOrchestrator", "HierarchicalOrchestrator",
+           "NetworkModel", "Transport", "payload_bytes", "IndexRange",
+           "VirtualBatch", "VirtualBatchPlan", "create_virtual_batches",
+           "PipelinedEpochEngine", "pipelined_train_epoch", "TraversalPlan",
+           "Planner", "PlanSpec", "FlatPlanner", "TreePlanner"]

@@ -22,6 +22,13 @@ On a ``fused`` orchestrator (the default) each buffered contribution's
 centralized BP runs through the orchestrator's cached jitted
 per-contribution step (``TLOrchestrator._get_contrib_step``) instead of an
 eager per-call ``jax.vjp``; ``fused=False`` keeps the eager oracle.
+
+The hierarchical orchestrator (``repro.core.hierarchy``) reuses the
+:class:`GradientBuffer` drain as its root merge: unlike the async WAN
+case, every per-subtree contribution there is a *complete* pre-scaled
+partial sum of the same virtual batch at the same model version, so the
+buffered sum is the flat full-batch gradient up to f32 reassociation —
+the buffer's machinery, without its staleness trade-off.
 """
 from __future__ import annotations
 

@@ -1,6 +1,15 @@
 """TL orchestrator — Algorithm 2: traversal scheduling, activation/gradient
 retrieval, centralized BP, model redistribution.
 
+Since the planner/executor split, *planning* (Algorithm 1) lives in
+``repro.core.plan``: the orchestrator executes whatever
+:class:`~repro.core.plan.TraversalPlan` its configured planner produces
+(``build_plan`` is a thin shim; ``execute_plan`` runs an epoch of an
+already-built plan, which is how the hierarchical orchestrator drives its
+subtree executors).  Planning knobs group under ``plan=PlanSpec(...)``;
+the old ``seed=``/``replicas=``/``recovery=`` spellings still work with a
+``DeprecationWarning``.
+
 Centralized phase (paper §3.3.2): the orchestrator reassembles the virtual
 batch's first-layer activations X^(1) in batch order, *recomputes* all
 deeper activations with the current parameters (eq. 4–5), backpropagates
@@ -46,6 +55,7 @@ from __future__ import annotations
 
 import functools
 import operator
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -57,9 +67,9 @@ from repro.core.faults import (FaultEvent, NodeHealth, RecoveryPolicy,
                                UnrecoverableFault, VisitDropped)
 from repro.core.node import (TLNode, add_first_layer_grads,
                              first_layer_grad_leaves)
+from repro.core.plan import Planner, PlanSpec, TraversalPlan
 from repro.core.transport import Transport
-from repro.core.virtual_batch import (VirtualBatchPlan, assert_exactly_once,
-                                      create_virtual_batches)
+from repro.core.virtual_batch import assert_covers_traversal
 
 
 @dataclass
@@ -69,24 +79,68 @@ class StepStats:
     grad_consistency: float     # max |orchestrator dX1 - aggregated node dX1|
 
 
+# sentinel distinguishing "legacy planning kwarg not passed" from any value
+_LEGACY_UNSET = object()
+
+
+def _resolve_plan_spec(plan, *, seed, replicas, recovery) -> PlanSpec:
+    """Fold the constructor's planning arguments into one PlanSpec.
+
+    ``plan`` may be a :class:`PlanSpec`, a bare :class:`Planner`, or None.
+    The pre-split spellings (``seed=``/``replicas=``/``recovery=`` as
+    separate keywords) still work but are deprecated in favor of
+    ``plan=PlanSpec(...)``; combining them with an explicit PlanSpec is an
+    error rather than a silent precedence rule.
+    """
+    legacy = {"seed": seed, "replicas": replicas, "recovery": recovery}
+    given = {k: v for k, v in legacy.items() if v is not _LEGACY_UNSET}
+    if isinstance(plan, PlanSpec):
+        if given:
+            raise ValueError(
+                f"planning knobs passed twice: move {'/'.join(given)} "
+                "inside plan=PlanSpec(...)")
+        return plan
+    for k in given:
+        warnings.warn(
+            f"TLOrchestrator({k}=...) is deprecated; pass "
+            f"plan=PlanSpec({k}=...) instead",
+            DeprecationWarning, stacklevel=3)
+    if plan is not None and not isinstance(plan, Planner):
+        raise TypeError(
+            f"plan= must be a PlanSpec or a Planner, got {type(plan)!r}")
+    return PlanSpec(
+        planner=plan,
+        seed=(0 if seed is _LEGACY_UNSET else seed),
+        replicas=(None if replicas is _LEGACY_UNSET else replicas),
+        recovery=(None if recovery is _LEGACY_UNSET else recovery))
+
+
 class TLOrchestrator:
     def __init__(self, model, nodes: Sequence[TLNode], optimizer,
                  transport: Optional[Transport] = None, *,
-                 batch_size: int = 64, seed: int = 0,
+                 plan: Optional[object] = None,
+                 batch_size: int = 64, seed=_LEGACY_UNSET,
                  compute_time_fn: Callable[[int], float] = lambda n: 0.0,
                  bp_time_fn: Callable[[int], float] = lambda n: 0.0,
                  check_consistency: bool = True,
                  cache_model_per_epoch: bool = False,
                  fused: bool = True, donate: bool = False,
                  pipelined: bool = False, reassembly: str = "xla",
-                 replicas: Optional[Dict[int, TLNode]] = None,
-                 recovery: Optional[RecoveryPolicy] = None):
+                 replicas: Optional[Dict[int, TLNode]] = _LEGACY_UNSET,
+                 recovery: Optional[RecoveryPolicy] = _LEGACY_UNSET):
         self.model = model
         self.nodes = list(nodes)
         self.opt = optimizer
         self.transport = transport or Transport()
-        self.batch_size = batch_size
-        self.seed = seed
+        # planning knobs live in a PlanSpec (repro.core.plan); the flat
+        # attributes stay as the public read surface
+        spec = _resolve_plan_spec(plan, seed=seed, replicas=replicas,
+                                  recovery=recovery)
+        self.plan_spec = spec
+        self.planner: Planner = spec.resolve_planner()
+        self.batch_size = (batch_size if spec.batch_size is None
+                           else spec.batch_size)
+        self.seed = spec.seed
         self.compute_time_fn = compute_time_fn
         # simulated centralized-BP time per virtual batch (size N); the
         # serial path ticks it on the clock, the pipelined engine overlaps
@@ -125,14 +179,15 @@ class TLOrchestrator:
         # drop visit payloads.  Recovery is lossless: a retried or
         # failed-over visit produces the same wire payload, so losses and
         # params stay bit-equal to the fault-free run (tests/test_faults.py).
-        self.replicas: Dict[int, TLNode] = dict(replicas or {})
-        self.recovery = recovery or RecoveryPolicy()
+        self.replicas: Dict[int, TLNode] = dict(spec.replicas or {})
+        self.recovery = spec.recovery or RecoveryPolicy()
         self.fault_log: List[FaultEvent] = []
         self._health: Dict[int, NodeHealth] = {}
         self.params = None
         self.opt_state = None
         self._epoch = 0
         self._step = 0              # global virtual-batch counter (ckpt id)
+        self._active_plan: Optional[TraversalPlan] = None
         self._fused_step = None
         self._contrib_step = None
         self._gw1_leaves = None
@@ -142,11 +197,17 @@ class TLOrchestrator:
         self.params = self.model.init(key)
         self.opt_state = self.opt.init(self.params)
 
-    def build_plan(self, epoch: int) -> VirtualBatchPlan:
+    def build_plan(self, epoch: int) -> TraversalPlan:
+        """Thin shim over the configured :class:`~repro.core.plan.Planner`.
+
+        Index-range retrieval stays here because it is a transport
+        interaction (step 1 of Algorithm 1): ranges are queried — and
+        charged — exactly once per epoch at the planning orchestrator,
+        never re-queried per subtree in a hierarchical run."""
         ranges = [self.transport.send("index_range", n.index_range())
                   for n in self.nodes]
-        return create_virtual_batches(ranges, self.batch_size,
-                                      seed=self.seed + epoch)
+        return self.planner.plan(ranges, batch_size=self.batch_size,
+                                 seed=self.seed, epoch=epoch)
 
     # ---------------------------------------------------------- one TL step
     def train_batch(self, vb, node_by_id) -> StepStats:
@@ -199,7 +260,10 @@ class TLOrchestrator:
                                                  issue=issue)
                 results[seg.node_id] = (seg, wire)
                 order.append(seg.node_id)
-        assert_exactly_once(vb.size, [results[nid][0] for nid in order])
+        # a restricted (subtree) batch covers a subset of the rows, so the
+        # invariant is checked against the batch's own traversal — for a
+        # full batch that is exactly the 0..N-1 partition check
+        assert_covers_traversal(vb, [results[nid][0] for nid in order])
         return results, order
 
     def _visit_with_recovery(self, vb, seg, node_by_id, *, issue: bool):
@@ -487,7 +551,7 @@ class TLOrchestrator:
                      for l, a, c in vals]
         return stats
 
-    def _epoch_batches(self, plan: VirtualBatchPlan, start_batch: int,
+    def _epoch_batches(self, plan: TraversalPlan, start_batch: int,
                        max_batches: Optional[int]):
         """The slice of this epoch's batches to run, plus whether running
         them completes the epoch (mid-epoch resume/kill support)."""
@@ -500,19 +564,15 @@ class TLOrchestrator:
                 else min(len(plan.batches), start_batch + max_batches))
         return plan.batches[start_batch:stop], stop >= len(plan.batches)
 
-    def train_epoch(self, *, start_batch: int = 0,
-                    max_batches: Optional[int] = None) -> List[StepStats]:
-        """One epoch (or, for kill/resume, the ``[start_batch, start_batch
-        + max_batches)`` slice of one).  The virtual-batch plan is a pure
-        function of ``seed + epoch``, so a resumed run re-derives exactly
-        the plan the killed run was executing and skips the batches whose
-        updates the checkpoint already contains; ``_epoch`` advances only
-        when the epoch's final batch ran."""
-        if self.pipelined:
-            from repro.core.pipeline import pipelined_train_epoch
-            return pipelined_train_epoch(self, start_batch=start_batch,
-                                         max_batches=max_batches)
-        plan = self.build_plan(self._epoch)
+    def execute_plan(self, plan: TraversalPlan, *, start_batch: int = 0,
+                     max_batches: Optional[int] = None) -> List[StepStats]:
+        """Pure executor: run (a slice of) an already-built epoch plan.
+
+        This is the execution half of the planner/executor split — the
+        orchestrator never asks where the plan came from, so a nested
+        (subtree) plan executes through exactly the same path as a flat
+        one.  ``_epoch`` advances only when the epoch's final batch ran."""
+        self._active_plan = plan
         batches, completes = self._epoch_batches(plan, start_batch,
                                                  max_batches)
         node_by_id = {n.node_id: n for n in self.nodes}
@@ -529,6 +589,22 @@ class TLOrchestrator:
         if completes:
             self._epoch += 1
         return self._finalize_epoch_stats(stats)
+
+    def train_epoch(self, *, start_batch: int = 0,
+                    max_batches: Optional[int] = None) -> List[StepStats]:
+        """One epoch (or, for kill/resume, the ``[start_batch, start_batch
+        + max_batches)`` slice of one): a thin plan-then-execute shim.
+        The virtual-batch plan is a pure function of ``seed + epoch``, so
+        a resumed run re-derives exactly the plan the killed run was
+        executing and skips the batches whose updates the checkpoint
+        already contains."""
+        if self.pipelined:
+            from repro.core.pipeline import pipelined_train_epoch
+            return pipelined_train_epoch(self, start_batch=start_batch,
+                                         max_batches=max_batches)
+        plan = self.build_plan(self._epoch)
+        return self.execute_plan(plan, start_batch=start_batch,
+                                 max_batches=max_batches)
 
     def fit(self, key, epochs: int) -> List[StepStats]:
         if self.params is None:

@@ -97,9 +97,11 @@ class PipelinedEpochEngine:
                   max_batches: int | None = None) -> List:
         """One (possibly resumed/truncated) epoch through the double
         buffer.  ``start_batch``/``max_batches`` mirror
-        ``TLOrchestrator.train_epoch`` — the plan is re-derived from
-        ``seed + epoch`` and sliced, so a killed pipelined run resumes on
-        exactly the batches whose updates the checkpoint lacks."""
+        ``TLOrchestrator.train_epoch`` — the :class:`~repro.core.plan.
+        TraversalPlan` is re-derived from the planner's pure
+        ``(seed, epoch)`` function and sliced, so a killed pipelined run
+        resumes on exactly the batches whose updates the checkpoint
+        lacks."""
         orch = self.orch
         tr = orch.transport
         plan = orch.build_plan(orch._epoch)

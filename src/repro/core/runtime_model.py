@@ -16,6 +16,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class WorkloadSpec:
@@ -80,10 +82,61 @@ def runtime_sfl(spec: WorkloadSpec) -> float:
     return t_client + spec.agg_s                                        # (18) max over equal clients
 
 
+def _runtime_tl_tree(spec: WorkloadSpec, n_subtrees: int) -> float:
+    """Eq. 19, two-tier branch: the transport-composition clock of a
+    hierarchical (or, at ``n_subtrees=1``, flat serial) TL epoch.
+
+    Mirrors ``repro.core.hierarchy`` term by term under the *uniform
+    composition* assumption — every node contributes ``batch_size /
+    n_nodes`` rows to every virtual batch (exact when one batch spans the
+    whole dataset, the regime the node-count benchmark runs in):
+
+    * per subtree lane: model-redistribution window (max over identical
+      transfers = one) + visit window (ditto) + the subtree's serial node
+      compute + its share of the centralized BP;
+    * inner traversals run in parallel lanes → max over subtrees;
+    * the root merge is serialized: one ``contribution`` upload (gradient
+      pytree = ``model_bytes``, + 8 B of stats scalars) per subtree;
+    * plus the epoch's plan cost (one index-range RTT per node).
+
+    Byte terms reproduce the simulator's wire format exactly (visit rows,
+    pruned first-layer grads, 8 B stats scalars per visit), so at
+    ``rtt_s=0``-style configurations the prediction matches the measured
+    transport clock to float tolerance (see the eq. 19 alignment tests).
+    """
+    if n_subtrees < 1:
+        raise ValueError(f"n_subtrees must be >= 1, got {n_subtrees}")
+    n = spec.n_nodes
+    if spec.batch_size % n:
+        raise ValueError(
+            "two-tier branch assumes uniform batch composition: "
+            f"batch_size ({spec.batch_size}) must be a multiple of "
+            f"n_nodes ({n})")
+    rows_per_node = spec.batch_size // n
+    n_batches = max(n * spec.samples_per_node // spec.batch_size, 1)
+    t_fb = (spec.flops_per_sample_fwd + spec.flops_per_sample_bwd) \
+        / spec.client_flops_per_s
+    bp_per_sample = t_fb * spec.client_flops_per_s / spec.server_flops_per_s
+    seg_bytes = (rows_per_node * (2 * spec.first_layer_bytes_per_sample
+                                  + spec.logits_bytes_per_sample)
+                 + spec.first_layer_param_bytes + 8)
+    model_t = _t_comm(spec, spec.model_bytes)
+    visit_t = _t_comm(spec, seg_bytes)
+    sizes = [len(part) for part in
+             np.array_split(np.arange(n), min(n_subtrees, n))]
+    lanes = [model_t + visit_t
+             + m * rows_per_node * (t_fb + bp_per_sample) for m in sizes]
+    per_batch = max(lanes)
+    if n_subtrees > 1:
+        per_batch += len(sizes) * _t_comm(spec, spec.model_bytes + 8)
+    return n * spec.rtt_s + n_batches * per_batch
+
+
 def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
                cache_model: bool = False, pipelined: bool = True,
                drop_prob: float = 0.0, straggle_prob: float = 0.0,
-               straggle_factor: float = 1.0) -> float:
+               straggle_factor: float = 1.0,
+               hierarchy: int | None = None) -> float:
     """Eq. 19, optionally with the double-buffered cross-batch pipeline.
 
     ``pipelined=True`` mirrors the epoch engine (``repro.core.pipeline``):
@@ -103,7 +156,22 @@ def runtime_tl(spec: WorkloadSpec, *, compressed: bool = False,
     fault-injected transport-simulated clock.  The orchestrator's
     centralized BP is unaffected (faults live on the node/wire side), and
     losslessness means the *arithmetic* is unchanged either way: only time
-    expands."""
+    expands.
+
+    ``hierarchy=s`` routes to the two-tier branch (:func:`_runtime_tl_tree`):
+    the clock of ``s`` subtree lanes running inner traversals in parallel
+    with a serialized root merge (``s=1``: the flat serial window clock of
+    the same composition — the baseline the hierarchy divides).  The
+    branch is exact per transport composition rather than the aggregate
+    eq. 19 approximation, and is incompatible with the other knobs."""
+    if hierarchy is not None:
+        # cross-batch pipelining does not apply (the subtree lanes are the
+        # overlap); ``pipelined`` is ignored rather than required off
+        if compressed or cache_model or drop_prob or straggle_prob:
+            raise ValueError(
+                "hierarchy= models the plain (uncompressed, uncached) "
+                "two-tier clock; other knobs are unsupported")
+        return _runtime_tl_tree(spec, hierarchy)
     from repro.core.faults import fault_expansion
     expansion = fault_expansion(drop_prob, straggle_prob, straggle_factor)
     _, samples, t_fwd, t_bwd = _per_round(spec)

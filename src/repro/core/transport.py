@@ -166,6 +166,13 @@ class WindowRecord:
     nbytes: int
     by_tag: Dict[str, int] = field(default_factory=dict)
     lanes: Dict[str, float] = field(default_factory=dict)   # overlap only
+    # overlap only: per-lane per-tag bytes.  Sums to ``by_tag`` exactly —
+    # a byte moved in one lane is attributed to that lane and no other, so
+    # nested orchestrators (one lane per subtree) can reconcile each
+    # subtree against the root ledger without re-walking nested records
+    # (which double-counts: a parallel window inside a lane logs its own
+    # record too).
+    lane_bytes: Dict[str, Dict[str, int]] = field(default_factory=dict)
     meta: Dict[str, float] = field(default_factory=dict)    # fault/wire only
 
 
@@ -176,6 +183,7 @@ class _OverlapScope:
         self._tr = transport
         self.totals: Dict[str, float] = {}       # lane name -> sequential time
         self.by_tag: Dict[str, int] = {}
+        self.lane_bytes: Dict[str, Dict[str, int]] = {}  # lane -> tag -> B
         self.nbytes = 0
 
     @contextlib.contextmanager
@@ -199,9 +207,11 @@ class _OverlapScope:
             entries, tr._lane, tr._lane_ticks = tr._lane, outer, outer_ticks
             self.totals[name] = (self.totals.get(name, 0.0)
                                  + sum(e[0] for e in entries))
+            mine = self.lane_bytes.setdefault(name, {})
             for _, tag, nb in entries:
                 if nb:
                     self.by_tag[tag] = self.by_tag.get(tag, 0) + nb
+                    mine[tag] = mine.get(tag, 0) + nb
                     self.nbytes += nb
 
 
@@ -317,7 +327,9 @@ class Transport:
             t = max(scope.totals.values(), default=0.0)
             self.window_log.append(
                 WindowRecord("overlap", t, scope.nbytes, dict(scope.by_tag),
-                             lanes=dict(scope.totals)))
+                             lanes=dict(scope.totals),
+                             lane_bytes={k: dict(v) for k, v
+                                         in scope.lane_bytes.items()}))
             self._deposit(t, "<overlap>", 0)
             for tag, nb in scope.by_tag.items():
                 self._deposit(0.0, tag, nb)

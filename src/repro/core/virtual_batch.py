@@ -127,6 +127,35 @@ def assert_exactly_once(size: int, segments: Sequence[NodeSegment]) -> None:
             f"{bad.tolist()} covered {counts[bad].tolist()} times)")
 
 
+def assert_covers_traversal(vb: VirtualBatch,
+                            segments: Sequence[NodeSegment]) -> None:
+    """Verify collected segments cover exactly the batch's own traversal.
+
+    The generalization of :func:`assert_exactly_once` that restricted
+    (subtree) batches need: a child batch's traversal covers only its
+    subtree's rows, so the collected ``batch_positions`` must equal the
+    planned ones as a multiset — each planned row assembled once and only
+    once, no foreign rows.  For a full batch the planned positions
+    partition ``0..size-1`` by construction (:func:`make_traversal`), so
+    this is exactly the old check."""
+    planned = (np.concatenate([s.batch_positions for s in vb.traversal])
+               if vb.traversal else np.empty((0,), np.int64))
+    got = (np.concatenate([s.batch_positions for s in segments])
+           if segments else np.empty((0,), np.int64))
+    if len(got) != len(planned):
+        raise RuntimeError(
+            f"virtual batch {vb.batch_id} assembled {len(got)} rows, "
+            f"planned {len(planned)}: a traversal segment was lost or "
+            "duplicated during recovery")
+    if not np.array_equal(np.sort(got.astype(np.int64)),
+                          np.sort(planned.astype(np.int64))):
+        raise RuntimeError(
+            f"virtual batch {vb.batch_id} rows not assembled exactly as "
+            "planned: collected batch positions differ from the "
+            "traversal's (a row was dropped, duplicated, or came from "
+            "outside this batch's plan)")
+
+
 def create_virtual_batches(ranges: Sequence[IndexRange], batch_size: int,
                            *, seed: int = 0, randomize_ids: bool = False,
                            drop_remainder: bool = True) -> VirtualBatchPlan:

@@ -150,7 +150,8 @@ class Engine:
                  device_faults=None, watchdog_s: float = 60.0,
                  batch_size: int = 64, transport=None, fused: bool = True,
                  cache_model_per_epoch: bool = False, seed: int = 0,
-                 wire: str = "off", wire_ef: bool = False):
+                 wire: str = "off", wire_ef: bool = False,
+                 hierarchy: int = 0):
         if mode not in ("production", "sim"):
             raise ValueError(f"unknown engine mode: {mode!r}")
         if mode == "production" and (mesh is None or shape is None):
@@ -164,6 +165,18 @@ class Engine:
                              "not both")
         if reassembly not in ("none", "xla", "pallas"):
             raise ValueError(f"unknown reassembly strategy: {reassembly!r}")
+        if hierarchy < 0:
+            raise ValueError(f"hierarchy must be >= 0, got {hierarchy}")
+        if hierarchy and mode != "sim":
+            raise ValueError(
+                "hierarchy= (two-tier orchestration fan-out) is "
+                "simulator-only: the production pjit path shards one flat "
+                "step instead of nesting orchestrators")
+        if hierarchy and pipeline:
+            raise ValueError(
+                "hierarchy= needs pipeline=False: the subtree lanes are "
+                "the overlap; the double-buffered epoch engine on top "
+                "would double-book the clock")
         if elastic and mode != "production":
             raise ValueError("elastic mode is production-only")
         if elastic and not ckpt_dir:
@@ -237,6 +250,9 @@ class Engine:
         self.fused = fused
         self.cache_model_per_epoch = cache_model_per_epoch
         self.seed = seed
+        # hierarchy > 0: sim mode builds a HierarchicalOrchestrator with
+        # that many subtrees (0 = flat single orchestrator)
+        self.hierarchy = hierarchy
         self.orchestrator = None
         self._sim_shards = None
         # production-mode state
@@ -689,6 +705,7 @@ class Engine:
     def _run_sim(self, shards, epochs: int) -> EngineResult:
         from repro.core.node import TLNode
         from repro.core.orchestrator import TLOrchestrator
+        from repro.core.plan import PlanSpec
         from repro.core.transport import Transport
 
         if self.orchestrator is not None and shards is not self._sim_shards:
@@ -703,15 +720,23 @@ class Engine:
             self._sim_shards = shards
             nodes = [TLNode(i, self.model, s.x, s.y, jit_visits=self.fused)
                      for i, s in enumerate(shards)]
-            self.orchestrator = TLOrchestrator(
-                self.model, nodes, self.opt,
-                self.transport or Transport(),
-                batch_size=self.batch_size, seed=self.seed,
+            common = dict(
+                plan=PlanSpec(seed=self.seed, batch_size=self.batch_size),
                 fused=self.fused, donate=False,
                 cache_model_per_epoch=self.cache_model_per_epoch,
-                pipelined=self.pipeline,
                 reassembly=("xla" if self.reassembly == "none"
                             else self.reassembly))
+            if self.hierarchy:
+                from repro.core.hierarchy import HierarchicalOrchestrator
+                self.orchestrator = HierarchicalOrchestrator(
+                    self.model, nodes, self.opt,
+                    self.transport or Transport(),
+                    n_subtrees=self.hierarchy, **common)
+            else:
+                self.orchestrator = TLOrchestrator(
+                    self.model, nodes, self.opt,
+                    self.transport or Transport(),
+                    pipelined=self.pipeline, **common)
             if self.params is not None:       # caller-provided init (eq. 13)
                 self.orchestrator.params = self.params
                 self.orchestrator.opt_state = self.opt.init(self.params)

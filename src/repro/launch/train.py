@@ -79,12 +79,13 @@ def _run_sim(args):
         r.normal(size=(64,) + DATRET.in_shape).astype(np.float32),
         r.integers(0, DATRET.n_classes, 64)) for _ in range(args.nodes)]
     engine = Engine(SmallModel(DATRET), DATRET, sgd(0.05), mode="sim",
-                    pipeline=args.pipeline, batch_size=32, seed=0,
+                    pipeline=args.pipeline and not args.hierarchy,
+                    batch_size=32, seed=0, hierarchy=args.hierarchy,
                     wire=args.wire, wire_ef=args.wire_ef)
     result = engine.run(shards, epochs=args.epochs)
     tr = engine.orchestrator.transport
     print(f"mode=sim arch=datret nodes={args.nodes} epochs={args.epochs} "
-          f"wire={args.wire} ef={args.wire_ef}")
+          f"hierarchy={args.hierarchy} wire={args.wire} ef={args.wire_ef}")
     for tag in sorted(tr.bytes_sent):
         raw, wire = tr.raw_bytes.get(tag, 0), tr.bytes_sent[tag]
         print(f"wire[{tag}]: raw={raw} wire={wire} "
@@ -158,6 +159,10 @@ def main(argv=None):
                          "the wire-compression lane is live")
     ap.add_argument("--epochs", type=int, default=3,
                     help="sim mode: orchestrator epochs")
+    ap.add_argument("--hierarchy", type=int, default=0,
+                    help="sim mode: two-tier orchestration fan-out — "
+                         "number of subtrees (0: flat). Implies "
+                         "--no-pipeline: the subtree lanes are the overlap")
     ap.add_argument("--wire", default="off", choices=["off", "int8", "fp8"],
                     help="visit-payload wire codec in the sim transport "
                          "(X^(1)/δ^(L)/∂X^(1)/∂W^(1) quantize per-row; "

@@ -122,6 +122,7 @@ def _fused_step_hlo(reassembly):
     from repro.configs.paper_models import DATRET
     from repro.core.node import TLNode
     from repro.core.orchestrator import TLOrchestrator
+    from repro.core.plan import PlanSpec
     from repro.core.transport import Transport
     from repro.models.small import SmallModel
     from repro.optim import sgd
@@ -133,7 +134,8 @@ def _fused_step_hlo(reassembly):
                     r.integers(0, DATRET.n_classes, n))
              for i, n in enumerate([9, 7])]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=16, seed=0, reassembly=reassembly)
+                          batch_size=16, plan=PlanSpec(seed=0),
+                          reassembly=reassembly)
     orch.initialize(jax.random.PRNGKey(0))
     vb = orch.build_plan(0).batches[0]
     node_by_id = {n.node_id: n for n in orch.nodes}

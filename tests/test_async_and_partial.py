@@ -13,6 +13,7 @@ from repro.core.baselines import ShardData, evaluate, train_cl
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
 from repro.core.partial_update import PartialUpdateCodec
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.data.datasets import shard_iid, tabular
 from repro.models.small import SmallModel
@@ -103,7 +104,8 @@ def test_async_flush_epoch_matches_exactly_full_epoch(setup):
     for min_c in (None, 100):
         nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
         orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                              batch_size=32, seed=0, check_consistency=False)
+                              batch_size=32, plan=PlanSpec(seed=0),
+                              check_consistency=False)
         orch.initialize(key)
         stats, _ = async_train_epoch(orch, min_contributions=min_c)
         assert stats                               # updates were applied
@@ -118,7 +120,8 @@ def test_async_uses_cached_contrib_step_on_fused_orch(setup):
     model, shards, test = setup
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=32, seed=0, check_consistency=False)
+                          batch_size=32, plan=PlanSpec(seed=0),
+                          check_consistency=False)
     orch.initialize(jax.random.PRNGKey(0))
     assert orch._contrib_step is None
     async_train_epoch(orch)
@@ -140,7 +143,8 @@ def test_async_epoch_trains(setup):
     model, shards, test = setup
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=32, seed=0, check_consistency=False)
+                          batch_size=32, plan=PlanSpec(seed=0),
+                          check_consistency=False)
     orch.initialize(jax.random.PRNGKey(0))
     lat = {0: 0.01, 1: 0.5, 2: 0.02, 3: 0.05}
     for _ in range(3):
@@ -159,7 +163,8 @@ def test_async_with_full_contributions_matches_sync_quality(setup):
     key = jax.random.PRNGKey(1)
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=32, seed=0, check_consistency=False)
+                          batch_size=32, plan=PlanSpec(seed=0),
+                          check_consistency=False)
     orch.initialize(key)
     for _ in range(3):
         async_train_epoch(orch)

@@ -11,6 +11,7 @@ from repro.configs.paper_models import DATRET
 from repro.core import baselines as B
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.data.datasets import shard_noniid, tabular
 from repro.models.small import SmallModel
@@ -73,7 +74,8 @@ def test_tl_matches_cl_on_noniid(task):
     key = jax.random.PRNGKey(0)
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(sdata)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=32, seed=0, check_consistency=False)
+                          batch_size=32, plan=PlanSpec(seed=0),
+                          check_consistency=False)
     orch.initialize(key)
     for _ in range(3):
         orch.train_epoch()

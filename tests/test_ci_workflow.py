@@ -107,6 +107,21 @@ def test_bench_smoke_job_gates_schema_and_uploads_artifact(wf):
     assert uploads and uploads[0]["with"]["path"] == "BENCH_tl_step_smoke.json"
 
 
+def test_bench_smoke_job_gates_hierarchy_schema_and_uploads_artifact(wf):
+    """The two-tier hierarchy smoke (64 simulated nodes) rides the
+    bench-smoke job: run, schema-gated, uploaded — like tl_step_smoke."""
+    job = wf["jobs"]["bench-smoke"]
+    runs = " ".join(_run_lines(job))
+    assert "hierarchy_smoke" in runs
+    assert "BENCH_hierarchy_smoke.json" in runs
+    assert "benchmarks/schemas/hierarchy_smoke.schema.json" in runs
+    uploads = [s for s in _steps(job)
+               if "upload-artifact" in s.get("uses", "")]
+    hier = [u for u in uploads
+            if u["with"]["path"] == "BENCH_hierarchy_smoke.json"]
+    assert hier and hier[0]["if"] == "always()"
+
+
 def test_serve_smoke_job_gates_schema_and_uploads_artifact(wf):
     job = wf["jobs"]["serve-smoke"]
     runs = " ".join(_run_lines(job))

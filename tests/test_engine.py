@@ -256,6 +256,7 @@ def test_engine_sim_facade_matches_orchestrator(pipeline):
     from repro.configs.paper_models import DATRET
     from repro.core.node import TLNode
     from repro.core.orchestrator import TLOrchestrator
+    from repro.core.plan import PlanSpec
     from repro.core.transport import Transport
     from repro.launch.engine import Engine
     from repro.models.small import SmallModel
@@ -270,7 +271,8 @@ def test_engine_sim_facade_matches_orchestrator(pipeline):
 
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=16, seed=0, pipelined=pipeline)
+                          batch_size=16, plan=PlanSpec(seed=0),
+                          pipelined=pipeline)
     orch.initialize(jax.random.PRNGKey(0))
     ref = [s for _ in range(2) for s in orch.train_epoch()]
 

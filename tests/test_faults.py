@@ -25,6 +25,7 @@ from repro.core.faults import (FaultInjector, FaultSpec, RecoveryPolicy,
                                UnrecoverableFault, fault_expansion)
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.core.virtual_batch import NodeSegment, assert_exactly_once
 from repro.models.small import SmallModel
@@ -48,9 +49,11 @@ def _build(sizes, *, fused=True, fault=None, replicas=True, pipelined=False,
              for i, (x, y) in enumerate(data)} if replicas else None)
     tr = Transport(faults=FaultInjector(fault) if fault else None)
     orch = TLOrchestrator(model, nodes, sgd(0.05), tr,
-                          batch_size=16, seed=0, fused=fused,
-                          pipelined=pipelined, replicas=reps,
-                          recovery=recovery or RecoveryPolicy(backoff_s=0.01),
+                          batch_size=16, fused=fused, pipelined=pipelined,
+                          plan=PlanSpec(
+                              seed=0, replicas=reps,
+                              recovery=recovery
+                              or RecoveryPolicy(backoff_s=0.01)),
                           compute_time_fn=lambda k: 1e-4 * k,
                           bp_time_fn=lambda n: 5e-4 * n)
     orch.initialize(jax.random.PRNGKey(3))
@@ -127,8 +130,9 @@ def test_retry_wire_time_visible_without_backoff():
                 for i, (x, y) in enumerate(data)}
         tr = Transport(faults=FaultInjector(fault) if fault else None)
         orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=16,
-                              seed=0, replicas=reps,
-                              recovery=RecoveryPolicy())   # backoff_s=0
+                              plan=PlanSpec(seed=0, replicas=reps,
+                                            recovery=RecoveryPolicy()))
+        # RecoveryPolicy() default: backoff_s=0
         orch.initialize(jax.random.PRNGKey(3))
         return orch
 
@@ -254,10 +258,12 @@ def test_cached_mode_recovery_spans_epochs(pipelined):
                 for i, (x, y) in enumerate(data)}
         tr = Transport(faults=FaultInjector(fault) if fault else None)
         orch = TLOrchestrator(
-            model, nodes, sgd(0.05), tr, batch_size=16, seed=0,
-            cache_model_per_epoch=True, pipelined=pipelined, replicas=reps,
-            recovery=RecoveryPolicy(max_attempts=64, evict_after=2,
-                                    backoff_s=0.01))
+            model, nodes, sgd(0.05), tr, batch_size=16,
+            cache_model_per_epoch=True, pipelined=pipelined,
+            plan=PlanSpec(seed=0, replicas=reps,
+                          recovery=RecoveryPolicy(max_attempts=64,
+                                                  evict_after=2,
+                                                  backoff_s=0.01)))
         orch.initialize(jax.random.PRNGKey(3))
         return orch
 

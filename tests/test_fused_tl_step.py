@@ -15,6 +15,7 @@ import pytest
 from repro.configs.paper_models import CONVNET, DATRET
 from repro.core.node import TLNode, first_layer_grad_leaves
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.models.small import SmallModel
 from repro.optim import sgd
@@ -43,11 +44,12 @@ def test_fused_step_matches_eager_reference(cfg, reassembly):
     model = SmallModel(cfg)
     sizes = [13, 8, 11, 9]                                  # 4-node split
     eager = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 7, False),
-                           sgd(0.05), Transport(), batch_size=16, seed=0,
-                           fused=False)
+                           sgd(0.05), Transport(), batch_size=16,
+                           plan=PlanSpec(seed=0), fused=False)
     fused = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 7, True),
-                           sgd(0.05), Transport(), batch_size=16, seed=0,
-                           fused=True, donate=True, reassembly=reassembly)
+                           sgd(0.05), Transport(), batch_size=16,
+                           plan=PlanSpec(seed=0), fused=True, donate=True,
+                           reassembly=reassembly)
     key = jax.random.PRNGKey(3)
     eager.initialize(key)
     fused.initialize(key)
@@ -87,7 +89,8 @@ def test_pallas_reassembly_matches_xla_scatter(sizes, cache):
 
     def build(reassembly):
         orch = TLOrchestrator(model, _make_nodes(model, cfg, sizes, 5, True),
-                              sgd(0.05), Transport(), batch_size=16, seed=0,
+                              sgd(0.05), Transport(), batch_size=16,
+                              plan=PlanSpec(seed=0),
                               fused=True, donate=not cache,
                               cache_model_per_epoch=cache,
                               reassembly=reassembly)
@@ -123,7 +126,8 @@ def test_fused_reuses_one_compiled_step(rng):
     model = SmallModel(cfg)
     orch = TLOrchestrator(model, _make_nodes(model, cfg, [16, 16, 16, 16],
                                              11, True),
-                          sgd(0.05), Transport(), batch_size=16, seed=0)
+                          sgd(0.05), Transport(), batch_size=16,
+                          plan=PlanSpec(seed=0))
     orch.initialize(jax.random.PRNGKey(0))
     orch.train_epoch()
     step = orch._fused_step

@@ -1,0 +1,361 @@
+"""Hierarchical TL: the planner/executor split and the two-tier tree.
+
+The acceptance grid for ``repro.core.plan`` + ``repro.core.hierarchy``:
+
+* **Lossless merge**: a 2-subtree ``HierarchicalOrchestrator`` over uneven
+  node splits matches the flat orchestrator's parameter trajectory to a few
+  float32 ULPs, fused AND eager — the per-subtree contribution sums
+  reassociate the same tail-vjp arithmetic, nothing more.
+* **Planner purity / shim pin**: ``TLOrchestrator.build_plan`` is a thin
+  shim over ``FlatPlanner`` and returns byte-identical plans for the same
+  ``(seed, epoch)`` — pickled-bytes equality against the direct
+  Algorithm 1 call.
+* **Exactly-once trees** (property): ``TreePlanner`` partitions nodes and
+  every batch's positions exactly once across children, for ragged node
+  counts including single-node subtrees.
+* **Kwarg regrouping**: legacy planning kwargs (``seed=``, ``replicas=``,
+  ``recovery=``) still work but warn; mixing them with ``plan=PlanSpec``
+  is an error; the new spelling is warning-free.
+* **Window accounting** (satellite bugfix): per-subtree lane bytes sum
+  into the root ledger exactly — ``WindowRecord.lane_bytes`` reconciles
+  against ``by_tag`` per overlap record, and the serialized merge bytes
+  appear once in ``bytes_sent`` and in no lane.
+* **Eq. 19 two-tier branch**: ``runtime_tl(spec, hierarchy=s)`` predicts
+  the measured transport clock of a real simulated epoch to float
+  tolerance (rtt=0 alignment regime, same as the flat eq. 19 test).
+* **Engine fan-out**: ``Engine(mode="sim", hierarchy=s)`` is a faithful
+  facade (ULP-equal to the flat sim engine) and pins its validation
+  errors.
+"""
+import pickle
+import warnings
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.paper_models import DATRET
+from repro.core.faults import RecoveryPolicy
+from repro.core.hierarchy import HierarchicalOrchestrator
+from repro.core.node import TLNode
+from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import FlatPlanner, PlanSpec, TraversalPlan, TreePlanner
+from repro.core.runtime_model import WorkloadSpec, runtime_tl
+from repro.core.transport import NetworkModel, Transport, payload_bytes
+from repro.core.virtual_batch import IndexRange, create_virtual_batches
+from repro.models.small import SmallModel
+from repro.optim import sgd
+
+ULP_FACTOR = 16
+
+
+def _make_nodes(model, sizes, seed, jit_visits):
+    r = np.random.default_rng(seed)
+    return [TLNode(i, model,
+                   r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+                   r.integers(0, DATRET.n_classes, n), jit_visits=jit_visits)
+            for i, n in enumerate(sizes)]
+
+
+def _assert_ulp_equal(a, b):
+    eps = np.finfo(np.float32).eps
+    for pa, pb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x = np.asarray(pa, dtype=np.float64)
+        y = np.asarray(pb, dtype=np.float64)
+        tol = ULP_FACTOR * eps * max(1.0, float(np.abs(x).max()))
+        assert np.abs(x - y).max() <= tol, \
+            f"hierarchy drifted {np.abs(x - y).max():.3e} > {tol:.3e}"
+
+
+# ------------------------------------------------------------ lossless merge
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "eager"])
+@pytest.mark.parametrize("sizes", [[20, 12], [13, 8, 11]],
+                         ids=["2nodes-uneven", "3nodes-uneven"])
+def test_two_tier_matches_flat_to_ulp(sizes, fused):
+    """2 subtrees over uneven splits: same losses, same accuracy, ULP-equal
+    parameters after 2 epochs — the hierarchical merge is lossless."""
+    model = SmallModel(DATRET)
+    flat = TLOrchestrator(
+        model, _make_nodes(model, sizes, 7, fused), sgd(0.05), Transport(),
+        batch_size=16, plan=PlanSpec(seed=0), fused=fused)
+    hier = HierarchicalOrchestrator(
+        model, _make_nodes(model, sizes, 7, fused), sgd(0.05), Transport(),
+        n_subtrees=2, batch_size=16, plan=PlanSpec(seed=0), fused=fused)
+    key = jax.random.PRNGKey(3)
+    flat.initialize(key)
+    hier.initialize(key)
+    for _ in range(2):
+        sf = flat.train_epoch()
+        sh = hier.train_epoch()
+        assert len(sf) == len(sh)
+        for a, b in zip(sf, sh):
+            assert abs(float(a.loss) - float(b.loss)) < 1e-6
+            assert abs(float(a.acc) - float(b.acc)) < 1e-9
+    _assert_ulp_equal(flat.params, hier.params)
+
+
+def test_single_node_subtrees_and_clamped_fanout():
+    """n_subtrees beyond the node count clamps to one node per subtree and
+    stays lossless (the 1-node-subtree degenerate case)."""
+    model = SmallModel(DATRET)
+    flat = TLOrchestrator(model, _make_nodes(model, [9, 7, 5], 2, True),
+                          sgd(0.05), Transport(), batch_size=8,
+                          plan=PlanSpec(seed=1))
+    hier = HierarchicalOrchestrator(
+        model, _make_nodes(model, [9, 7, 5], 2, True), sgd(0.05), Transport(),
+        n_subtrees=8, batch_size=8, plan=PlanSpec(seed=1))
+    assert hier.n_subtrees == 3
+    key = jax.random.PRNGKey(0)
+    flat.initialize(key)
+    hier.initialize(key)
+    flat.train_epoch()
+    hier.train_epoch()
+    _assert_ulp_equal(flat.params, hier.params)
+
+
+# --------------------------------------------------------- planner/shim pins
+
+def test_build_plan_shim_returns_byte_identical_plans():
+    """The shim is pure and byte-identical to the direct Algorithm 1 call:
+    same (seed, epoch) → pickle-equal VirtualBatchPlan, for several epochs
+    (resume/recovery re-derive plans instead of storing them)."""
+    sizes = [13, 8, 11]
+    model = SmallModel(DATRET)
+    orch = TLOrchestrator(model, _make_nodes(model, sizes, 5, True),
+                          sgd(0.05), Transport(), batch_size=16,
+                          plan=PlanSpec(seed=4))
+    ranges = [IndexRange(i, n) for i, n in enumerate(sizes)]
+    for epoch in (0, 1, 2):
+        p1 = orch.build_plan(epoch)
+        p2 = orch.build_plan(epoch)
+        assert isinstance(p1, TraversalPlan)
+        assert pickle.dumps(p1.vb_plan) == pickle.dumps(p2.vb_plan)
+        direct = create_virtual_batches(ranges, 16, seed=4 + epoch)
+        assert pickle.dumps(p1.vb_plan) == pickle.dumps(direct)
+        # flat planner → no children; provenance carried on the plan
+        assert p1.children == () and (p1.seed, p1.epoch) == (4, epoch)
+
+
+@given(sizes=st.lists(st.integers(1, 9), min_size=1, max_size=10),
+       n_subtrees=st.integers(1, 12), batch=st.integers(1, 16),
+       seed=st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_tree_planner_partitions_exactly_once(sizes, n_subtrees, batch, seed):
+    """Property: for ragged node counts (including 1-node subtrees and
+    n_subtrees > n_nodes), the tree's children partition the nodes exactly
+    once, and every batch's positions land in exactly one child segment —
+    samples are neither dropped nor double-covered."""
+    ranges = [IndexRange(i, n) for i, n in enumerate(sizes)]
+    planner = TreePlanner(n_subtrees)
+    plan = planner.plan(ranges, batch_size=min(batch, sum(sizes)),
+                        seed=seed, epoch=0)
+    # nodes exactly once across children
+    assert len(plan.children) == min(n_subtrees, len(sizes))
+    flat_ids = [i for c in plan.children for i in c.node_ids]
+    assert sorted(flat_ids) == [r.node_id for r in ranges]
+    for c in plan.children:
+        owned = set(c.node_ids)
+        for vb in c.batches:
+            assert all(s.node_id in owned for s in vb.traversal)
+    # per-batch: children's traversals partition the root batch positions
+    for vb in plan.batches:
+        pos = [p for c in plan.children
+               for s in c.batches[vb.batch_id].traversal
+               for p in s.batch_positions.tolist()]
+        assert sorted(pos) == list(range(vb.size))
+        # child batches keep the root's global ids (the 1/N denominator)
+        for c in plan.children:
+            np.testing.assert_array_equal(
+                c.batches[vb.batch_id].global_ids, vb.global_ids)
+
+
+def test_tree_planner_rejects_bad_fanout_and_duplicates():
+    with pytest.raises(ValueError, match="n_subtrees"):
+        TreePlanner(0)
+    with pytest.raises(ValueError, match="duplicate"):
+        TreePlanner(2).partition([1, 1, 2])
+
+
+# ------------------------------------------------------- kwarg regrouping
+
+def test_legacy_planning_kwargs_warn_and_plan_spec_does_not():
+    model = SmallModel(DATRET)
+    nodes = _make_nodes(model, [10, 6], 1, True)
+    for kw, match in ((dict(seed=3), "seed"),
+                      (dict(replicas={}), "replicas"),
+                      (dict(recovery=RecoveryPolicy()), "recovery")):
+        with pytest.warns(DeprecationWarning, match=match):
+            orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                                  batch_size=16, **kw)
+    assert orch.recovery is not None
+    # new spelling: warning-free, same resolved knobs
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                              plan=PlanSpec(seed=3, batch_size=16))
+    assert orch.seed == 3 and orch.batch_size == 16
+    assert isinstance(orch.planner, FlatPlanner)
+
+
+def test_mixing_plan_spec_with_legacy_kwargs_is_an_error():
+    model = SmallModel(DATRET)
+    nodes = _make_nodes(model, [10, 6], 1, True)
+    with pytest.raises(ValueError, match="twice"):
+        TLOrchestrator(model, nodes, sgd(0.05), Transport(),
+                       plan=PlanSpec(seed=3), seed=3)
+    with pytest.raises(TypeError, match="Planner"):
+        TLOrchestrator(model, nodes, sgd(0.05), Transport(), plan=42)
+
+
+def test_hierarchical_orchestrator_requires_tree_planner():
+    model = SmallModel(DATRET)
+    nodes = _make_nodes(model, [10, 6], 1, True)
+    with pytest.raises(ValueError, match="TreePlanner"):
+        HierarchicalOrchestrator(model, nodes, sgd(0.05), Transport(),
+                                 plan=PlanSpec(planner=FlatPlanner()))
+
+
+# --------------------------------------------------- nested window accounting
+
+def test_subtree_lane_bytes_sum_into_root_ledger_without_double_count():
+    """Satellite bugfix regression, on a 2-subtree tree: every overlap
+    record's per-lane byte attribution sums to its ``by_tag`` exactly (a
+    byte is attributed to one lane and no other), the visit/model bytes
+    equal the flat run's, and the merge bytes are charged exactly once —
+    outside every lane."""
+    model = SmallModel(DATRET)
+    sizes = [13, 8, 11, 9]
+    flat = TLOrchestrator(model, _make_nodes(model, sizes, 7, True),
+                          sgd(0.05), Transport(), batch_size=16,
+                          plan=PlanSpec(seed=0))
+    hier = HierarchicalOrchestrator(
+        model, _make_nodes(model, sizes, 7, True), sgd(0.05), Transport(),
+        n_subtrees=2, batch_size=16, plan=PlanSpec(seed=0))
+    key = jax.random.PRNGKey(1)
+    flat.initialize(key)
+    hier.initialize(key)
+    flat.train_epoch()
+    hier.train_epoch()
+
+    tr = hier.transport
+    overlaps = [r for r in tr.window_log if r.kind == "overlap"]
+    assert overlaps, "the hierarchy never opened a subtree overlap scope"
+    for rec in overlaps:
+        summed = {}
+        for per_tag in rec.lane_bytes.values():
+            for tag, nb in per_tag.items():
+                summed[tag] = summed.get(tag, 0) + nb
+        assert summed == rec.by_tag        # lanes sum to the window, exactly
+        assert "contribution" not in rec.by_tag     # merge is outside lanes
+    # per-subtree lanes move the same protocol bytes the flat run does
+    for tag in ("model", "activations_grads"):
+        assert hier.transport.bytes_sent[tag] == flat.transport.bytes_sent[tag]
+    assert "contribution" not in flat.transport.bytes_sent
+    # merge bytes: one gradient pytree + 8 B of stats scalars per
+    # (batch, nonempty subtree), charged exactly once
+    plan = TreePlanner(2).plan([IndexRange(i, n) for i, n in enumerate(sizes)],
+                               batch_size=16, seed=0, epoch=0)
+    per_contrib = payload_bytes(hier.params) + 8
+    expected = sum(per_contrib
+                   for vb in plan.batches for c in plan.children
+                   if c.batches[vb.batch_id].traversal)
+    assert hier.transport.bytes_sent["contribution"] == expected
+
+
+# ------------------------------------------------ eq. 19 two-tier alignment
+
+SIM_COMPUTE = 1e-4
+SIM_BP = 5e-4
+
+
+def _simulated(n_nodes, n_subtrees):
+    """One-batch uniform-composition epoch on a zero-rtt 1 MB/s link —
+    the byte-exact alignment regime of the existing eq. 19 test."""
+    model = SmallModel(DATRET)
+    nodes = _make_nodes(model, [2] * n_nodes, 0, True)
+    tr = Transport(network=NetworkModel(bandwidth_bytes_per_s=1e6, rtt_s=0.0))
+    kw = dict(batch_size=2 * n_nodes, plan=PlanSpec(seed=0),
+              compute_time_fn=lambda m: SIM_COMPUTE * m,
+              bp_time_fn=lambda m: SIM_BP * m)
+    if n_subtrees is None:
+        orch = TLOrchestrator(model, nodes, sgd(0.05), tr, **kw)
+    else:
+        orch = HierarchicalOrchestrator(model, nodes, sgd(0.05), tr,
+                                        n_subtrees=n_subtrees, **kw)
+    orch.initialize(jax.random.PRNGKey(0))
+    orch.train_epoch()
+    return orch
+
+
+def _spec(n_nodes, model_bytes):
+    client = 1e12
+    return WorkloadSpec(
+        n_nodes=n_nodes, samples_per_node=2, batch_size=2 * n_nodes,
+        model_bytes=model_bytes,
+        first_layer_bytes_per_sample=DATRET.hidden[0] * 4,
+        logits_bytes_per_sample=DATRET.n_classes * 4,
+        first_layer_param_bytes=(DATRET.in_shape[0] + 1)
+        * DATRET.hidden[0] * 4,
+        flops_per_sample_fwd=SIM_COMPUTE / 2 * client,
+        flops_per_sample_bwd=SIM_COMPUTE / 2 * client,
+        client_flops_per_s=client,
+        server_flops_per_s=client * SIM_COMPUTE / SIM_BP,
+        bandwidth_bytes_per_s=1e6, rtt_s=0.0)
+
+
+@pytest.mark.parametrize("n_subtrees", [1, 3],
+                         ids=["flat-baseline", "ragged-3-subtrees"])
+def test_runtime_tl_two_tier_predicts_measured_clock(n_subtrees):
+    """``runtime_tl(spec, hierarchy=s)`` reproduces the transport clock of
+    a real simulated epoch: s=1 against the flat orchestrator, s=3 (ragged
+    [3, 3, 2] split of 8 nodes) against the hierarchy."""
+    orch = _simulated(8, None if n_subtrees == 1 else n_subtrees)
+    spec = _spec(8, payload_bytes(orch.params))
+    predicted = runtime_tl(spec, hierarchy=n_subtrees)
+    assert abs(predicted - orch.transport.clock_s) < 1e-6
+
+
+def test_runtime_tl_hierarchy_rejects_incompatible_knobs():
+    spec = _spec(8, 1000)
+    with pytest.raises(ValueError, match="two-tier"):
+        runtime_tl(spec, hierarchy=2, compressed=True)
+    with pytest.raises(ValueError, match="n_subtrees"):
+        runtime_tl(spec, hierarchy=0)
+    import dataclasses
+    bad = dataclasses.replace(spec, batch_size=15)
+    with pytest.raises(ValueError, match="multiple"):
+        runtime_tl(bad, hierarchy=2)
+
+
+# ----------------------------------------------------------- engine fan-out
+
+def test_engine_sim_hierarchy_fanout_matches_flat():
+    from repro.core.baselines import ShardData
+    from repro.launch.engine import Engine
+
+    r = np.random.default_rng(5)
+    shards = [ShardData(
+        r.normal(size=(n,) + DATRET.in_shape).astype(np.float32),
+        r.integers(0, DATRET.n_classes, n)) for n in [13, 8, 11, 9]]
+    model = SmallModel(DATRET)
+    flat = Engine(model, DATRET, sgd(0.05), mode="sim", pipeline=False,
+                  batch_size=16, seed=0).run(shards, epochs=1)
+    hier = Engine(model, DATRET, sgd(0.05), mode="sim", pipeline=False,
+                  batch_size=16, seed=0, hierarchy=2).run(shards, epochs=1)
+    _assert_ulp_equal(flat.params, hier.params)
+    np.testing.assert_allclose(flat.losses, hier.losses, rtol=1e-6)
+
+
+def test_engine_hierarchy_validation_errors():
+    from repro.launch.engine import Engine
+    model = SmallModel(DATRET)
+    with pytest.raises(ValueError, match=">= 0"):
+        Engine(model, DATRET, sgd(0.05), mode="sim", hierarchy=-1)
+    with pytest.raises(ValueError, match="pipeline=False"):
+        Engine(model, DATRET, sgd(0.05), mode="sim", hierarchy=2)
+    with pytest.raises(ValueError, match="simulator-only"):
+        Engine(model, DATRET, sgd(0.05), object(), object(),
+               mode="production", hierarchy=2)

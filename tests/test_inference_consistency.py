@@ -21,6 +21,7 @@ from repro.configs import get_config
 from repro.configs.paper_models import DATRET
 from repro.core.node import TLNode, ce_sum
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.data.datasets import shard_iid, tabular
 from repro.models import build_model
@@ -35,7 +36,8 @@ def _run_tl(seed_data, seed_model, epochs=2):
     model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=30, seed=0, check_consistency=False)
+                          batch_size=30, plan=PlanSpec(seed=0),
+                          check_consistency=False)
     orch.initialize(jax.random.PRNGKey(seed_model))
     for _ in range(epochs):
         orch.train_epoch()
@@ -69,7 +71,8 @@ def test_tl_cl_inference_decisions_agree():
     model = SmallModel(dataclasses.replace(DATRET, n_classes=4))
     nodes = [TLNode(i, model, s.x, s.y) for i, s in enumerate(shards)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=24, seed=0, check_consistency=False)
+                          batch_size=24, plan=PlanSpec(seed=0),
+                          check_consistency=False)
     key = jax.random.PRNGKey(7)
     orch.initialize(key)
 

@@ -21,6 +21,7 @@ from repro.configs.paper_models import DATRET
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
 from repro.core.pipeline import PipelinedEpochEngine
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.models.small import SmallModel
 from repro.optim import sgd
@@ -38,7 +39,8 @@ def _build(fused, cache, pipelined, sizes, *, donate=False, seed=7):
                     r.integers(0, DATRET.n_classes, n), jit_visits=fused)
              for i, n in enumerate(sizes)]
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=16, seed=0, fused=fused, donate=donate,
+                          batch_size=16, plan=PlanSpec(seed=0),
+                          fused=fused, donate=donate,
                           cache_model_per_epoch=cache, pipelined=pipelined,
                           compute_time_fn=lambda k: 1e-4 * k,
                           bp_time_fn=lambda n: 5e-4 * n)

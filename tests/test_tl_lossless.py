@@ -17,6 +17,7 @@ from repro.configs import get_config
 from repro.configs.paper_models import CONVNET, DATRET, TINY_TRANSFORMER
 from repro.core.node import TLNode, ce_sum
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.transport import Transport
 from repro.core.tl_step import tl_loss_fn
 from repro.models import build_model
@@ -43,7 +44,8 @@ def test_protocol_matches_cl_gradient(cfg, rng):
     sizes = [13, 8, 11, 9]
     nodes = _make_nodes(model, cfg, sizes, rng)
     tr = Transport()
-    orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=16, seed=0)
+    orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=16,
+                          plan=PlanSpec(seed=0))
     orch.initialize(jax.random.PRNGKey(0))
     p0 = orch.params
 
@@ -79,7 +81,7 @@ def test_protocol_training_matches_cl_trajectory(rng):
     sizes = [16, 16, 16, 16]
     nodes = _make_nodes(model, cfg, sizes, rng)
     orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                          batch_size=16, seed=0)
+                          batch_size=16, plan=PlanSpec(seed=0))
     orch.initialize(jax.random.PRNGKey(1))
     p_cl = orch.params
     st_cl = sgd(0.05).init(p_cl)

@@ -83,6 +83,7 @@ def test_pipelined_epoch_same_bytes_smaller_clock():
     from repro.configs.paper_models import DATRET
     from repro.core.node import TLNode
     from repro.core.orchestrator import TLOrchestrator
+    from repro.core.plan import PlanSpec
     from repro.models.small import SmallModel
     from repro.optim import sgd
 
@@ -94,7 +95,8 @@ def test_pipelined_epoch_same_bytes_smaller_clock():
                         r.integers(0, DATRET.n_classes, 24))
                  for i in range(2)]
         orch = TLOrchestrator(model, nodes, sgd(0.05), Transport(),
-                              batch_size=16, seed=0, pipelined=pipelined,
+                              batch_size=16, plan=PlanSpec(seed=0),
+                              pipelined=pipelined,
                               compute_time_fn=lambda k: 1e-4 * k,
                               bp_time_fn=lambda n: 5e-4 * n)
         orch.initialize(jax.random.PRNGKey(0))

@@ -28,6 +28,7 @@ from repro.configs.paper_models import DATRET
 from repro.core.faults import FaultInjector, FaultSpec, RecoveryPolicy
 from repro.core.node import TLNode
 from repro.core.orchestrator import TLOrchestrator
+from repro.core.plan import PlanSpec
 from repro.core.runtime_model import WorkloadSpec, runtime_tl
 from repro.core.transport import (LaneSpec, NetworkModel, Transport,
                                   WirePolicy, payload_bytes)
@@ -50,8 +51,9 @@ def _build(sizes, *, wire=None, fused=True, fault=None, pipelined=False,
     tr = Transport(network=network or NetworkModel(), wire=wire,
                    faults=FaultInjector(fault) if fault else None)
     orch = TLOrchestrator(model, nodes, sgd(0.05), tr, batch_size=batch,
-                          seed=0, fused=fused, pipelined=pipelined,
-                          recovery=RecoveryPolicy(backoff_s=0.0),
+                          plan=PlanSpec(seed=0,
+                                        recovery=RecoveryPolicy(backoff_s=0.0)),
+                          fused=fused, pipelined=pipelined,
                           cache_model_per_epoch=cache_model)
     orch.initialize(jax.random.PRNGKey(3))
     return orch
